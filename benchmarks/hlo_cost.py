@@ -1,0 +1,5 @@
+"""CLI shim — the implementation lives in repro.analysis.hlo_cost."""
+from repro.analysis.hlo_cost import HloCost, analyze_hlo, main
+
+if __name__ == "__main__":
+    main()

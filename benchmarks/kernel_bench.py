@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks (CPU wall-time is indicative only; TPU numbers
+come from the §Roofline model). Compares the Winograd path against direct
+convolution and im2col-GEMM at paper-realistic layer shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import (WinogradSpec, direct_conv2d,
+                                 winograd_conv2d)
+from repro.kernels import ref as kref
+from repro.kernels.wino_gemm import wino_gemm
+
+SHAPES = [  # (B, H, W, Cin, Cout) — ResNet18-CIFAR ×0.5 stage shapes
+    (8, 32, 32, 32, 32),
+    (8, 16, 16, 64, 64),
+    (8, 8, 8, 128, 128),
+]
+
+
+def im2col_conv(x, w):
+    B, H, W, C = x.shape
+    r = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = jnp.stack([xp[:, i:i + H, j:j + W, :]
+                      for i in range(r) for j in range(r)], -2)
+    return jnp.einsum("bhwkc,kcd->bhwd", cols,
+                      w.reshape(r * r, C, -1))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for (B, H, W, Ci, Co) in SHAPES:
+        x = jax.random.normal(key, (B, H, W, Ci))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
+        tag = f"{B}x{H}x{W}x{Ci}->{Co}"
+
+        us = time_fn(jax.jit(lambda x, w: direct_conv2d(x, w, "same")), x, w)
+        emit(f"direct_conv_{tag}", us, "lax.conv")
+        us = time_fn(jax.jit(im2col_conv), x, w)
+        emit(f"im2col_conv_{tag}", us, "im2col+gemm")
+
+        spec_fp = WinogradSpec(m=4, r=3, base="legendre",
+                               quant=QuantConfig.off())
+        us = time_fn(jax.jit(lambda x, w: winograd_conv2d(x, w, spec_fp)),
+                     x, w)
+        emit(f"wino_fp32_legendre_{tag}", us, "XLA einsum pipeline")
+
+        spec_q = WinogradSpec(m=4, r=3, base="legendre",
+                              quant=QuantConfig(hadamard_bits=9))
+        us = time_fn(jax.jit(lambda x, w: winograd_conv2d(x, w, spec_q)),
+                     x, w)
+        emit(f"wino_q8_legendre_{tag}", us, "fake-quant QAT pipeline")
+
+    # Winograd-domain GEMM: interpret-mode Pallas vs jnp oracle (CPU;
+    # correctness/latency smoke only — the MXU path is the TPU target)
+    P, M, K, N = 36, 256, 64, 64
+    xq = jax.random.randint(key, (P, M, K), -127, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.PRNGKey(2), (P, K, N), -127, 128,
+                            jnp.int8)
+    us = time_fn(lambda a, b: wino_gemm(a, b, blocks=(128, 64, 64),
+                                        interpret=True), xq, wq, iters=3)
+    emit(f"pallas_wino_gemm_interp_{P}x{M}x{K}x{N}", us,
+         "interpret-mode (CPU emulation)")
+    us = time_fn(jax.jit(kref.wino_gemm_ref), xq, wq)
+    emit(f"jnp_wino_gemm_ref_{P}x{M}x{K}x{N}", us, "XLA int32 einsum")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""§Roofline: turn the dry-run JSONs into the three-term roofline table.
+
+    compute term    = HLO_FLOPs_per_device  / peak_FLOP/s   (197 TF bf16)
+    memory term     = HLO_bytes_per_device  / HBM_bw        (819 GB/s)
+    collective term = coll_bytes_per_device / link_bw       (50 GB/s ICI)
+
+(The dry-run compiles the per-device SPMD program, so per-device numbers
+already embody the "/chips" in the brief's formulas.)
+
+MODEL_FLOPS uses the standard accounting: 6·N_active·tokens for training
+(+12·L·H·dh·S_eff attention per token), 2·N_active for inference, with
+S_eff = window for sliding-window archs and S/2 for causal full
+attention. The ratio MODEL/HLO exposes remat + dispatch + masking waste.
+
+Writes results/roofline.md and emits one CSV row per cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+def model_flops(cfg, seq: int, batch: int, kind: str) -> float:
+    """Global useful FLOPs per step (see module docstring)."""
+    L, d = cfg.n_layers, cfg.d_model
+    n_active = active_params(cfg)
+    attn_per_tok = 0.0
+    if cfg.n_heads:
+        n_attn = L
+        if cfg.family == "hybrid":
+            n_attn = sum(k == "attn" for k in cfg.block_pattern) * \
+                (L // len(cfg.block_pattern)) + \
+                sum(k == "attn" for k in cfg.block_pattern[
+                    :L % len(cfg.block_pattern)])
+        s_eff = min(seq, cfg.window) if cfg.window else seq / 2
+        attn_per_tok = 4 * n_attn * cfg.n_heads * cfg.d_head * s_eff
+    if cfg.family == "ssm":
+        # matrix-state update+readout ≈ 8·d·dh per token per layer fwd
+        attn_per_tok = 8 * L * d * cfg.rwkv_head_dim
+    tokens = batch * seq
+    if kind == "train":
+        return 6.0 * n_active * tokens + 3.0 * attn_per_tok * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * tokens + attn_per_tok * tokens
+    # decode: one token per sequence; attention reads the whole cache
+    s_eff = min(seq, cfg.window) if cfg.window else seq
+    attn_dec = 0.0
+    if cfg.n_heads:
+        attn_dec = 4 * L * cfg.n_heads * cfg.d_head * s_eff
+    if cfg.family == "ssm":
+        attn_dec = 8 * L * d * cfg.rwkv_head_dim
+    return (2.0 * n_active + attn_dec) * batch
+
+
+def active_params(cfg) -> float:
+    if getattr(cfg, "n_experts", 0):
+        d, L = cfg.d_model, cfg.n_layers
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head + \
+            cfg.n_heads * cfg.d_head * d
+        ff = 3 * d * cfg.moe_d_ff * cfg.top_k + 3 * d * cfg.shared_d_ff + \
+            d * cfg.n_experts
+        emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+        return L * (attn + ff) + emb
+    return cfg.param_count_dense_proxy()
+
+
+def analyze(record: dict, cfg) -> dict:
+    n_dev = record["n_devices"]
+    t_c = record["flops_per_device"] / PEAK_FLOPS
+    # CPU-backend caveat: XLA:CPU has no native bf16 arithmetic, so the
+    # lowered module computes/communicates bf16 values as f32 (verified:
+    # the TP all-reduces carry convert-to-f32 producers). On real TPU
+    # those tensors stay bf16 → byte-ish terms halve for bf16-param archs.
+    bf16 = str(getattr(cfg, "param_dtype", "")) == "bfloat16"
+    corr = 0.5 if bf16 else 1.0
+    t_m = record["bytes_per_device"] / HBM_BW
+    t_x = record["collective_total_bytes_per_device"] / ICI_BW
+    t_m_c, t_x_c = t_m * corr, t_x * corr
+    dominant = max(("compute", t_c), ("memory", t_m_c),
+                   ("collective", t_x_c), key=lambda kv: kv[1])
+    mf = model_flops(cfg, record["seq_len"], record["global_batch"],
+                     record["kind"]) / n_dev
+    bound = max(t_c, t_m_c, t_x_c)
+    return {
+        "compute_s": t_c, "memory_s": t_m_c, "collective_s": t_x_c,
+        "memory_s_raw": t_m, "collective_s_raw": t_x,
+        "dominant": dominant[0],
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / max(record["flops_per_device"], 1.0),
+        "roofline_mfu": (mf / PEAK_FLOPS) / max(bound, 1e-12),
+    }
+
+
+def main(out_dir: str = "results/dryrun", table: str = "results/roofline.md"):
+    from repro.configs import ARCHS
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(path))
+        cfg = ARCHS[rec["arch"]]
+        a = analyze(rec, cfg)
+        rows.append((rec, a))
+        emit(f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}", 0,
+             f"compute={a['compute_s']:.3f}s memory={a['memory_s']:.3f}s "
+             f"collective={a['collective_s']:.3f}s dom={a['dominant']} "
+             f"useful={a['useful_ratio']:.2f} "
+             f"mfu_bound={a['roofline_mfu']:.4f}")
+
+    os.makedirs(os.path.dirname(table), exist_ok=True)
+    with open(table, "w") as f:
+        f.write("| arch | shape | mesh | compute s | memory s | "
+                "collective s | dominant | MODEL/HLO flops | "
+                "roofline-MFU |\n|---|---|---|---|---|---|---|---|---|\n")
+        for rec, a in rows:
+            f.write(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                    f"{a['compute_s']:.3f} | {a['memory_s']:.3f} | "
+                    f"{a['collective_s']:.3f} | {a['dominant']} | "
+                    f"{a['useful_ratio']:.2f} | "
+                    f"{a['roofline_mfu']:.4f} |\n")
+    print(f"# wrote {table} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark orchestrator — one section per paper table/claim plus the
+roofline table. Prints ``name,us_per_call,derived`` CSV per the brief.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+--full runs the long QAT tables at larger step counts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (kernel_bench, mult_counts, roofline,
+                            table1_accuracy, table2_multipliers,
+                            transform_error)
+
+    sections = [
+        ("mult_counts (paper §1/§2)", mult_counts.main, []),
+        ("transform_error (paper §4/§5 mechanism)", transform_error.main,
+         []),
+        ("kernel_bench", kernel_bench.main, []),
+        ("table1 (paper Table 1 proxy)", table1_accuracy.main,
+         ["--steps", "200" if args.full else "50"]),
+        ("table2 (paper Table 2 proxy)", table2_multipliers.main,
+         ["--steps", "150" if args.full else "40"]),
+        ("roofline (§Roofline from dry-run)", roofline.main, None),
+    ]
+    failures = 0
+    for name, fn, fargs in sections:
+        print(f"# === {name} ===")
+        try:
+            fn(fargs) if fargs is not None else fn()
+        except Exception:              # noqa: BLE001 — report all sections
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

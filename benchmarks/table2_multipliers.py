@@ -1,0 +1,31 @@
+"""Paper Table 2 (reduced-scale proxy): the channel-multiplier sweep
+(0.25 / 0.5) for 8-bit quantization, direct vs L-flex.
+
+Same caveats as table1_accuracy.py — orderings, not absolute accuracy.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit
+from benchmarks.table1_accuracy import make_variant, train_variant
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    for width in (0.25, 0.5):
+        for name in ("direct", "L-flex"):
+            cfg = make_variant(name, width, 8)
+            t0 = time.time()
+            acc = train_variant(cfg, args.steps, args.batch)
+            us = (time.time() - t0) * 1e6 / args.steps
+            emit(f"table2_{name}_w{width}", us, f"train_acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper §4/§5 mechanism study: numerical error of quantized Winograd
+convolution by polynomial base, Hadamard bit-width, cast policy and scale
+granularity — plus the conditioning comparison that motivates the base
+change.
+
+This is the fast, deterministic benchmark behind the paper's central
+claims; the QAT table benchmarks (table1/table2) measure the trained
+counterpart.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import (WinogradSpec, condition_number,
+                                 direct_conv2d, make_matrices,
+                                 winograd_conv2d)
+
+
+def rel_err(y, ref):
+    return float(jnp.sqrt(jnp.mean((y - ref) ** 2)) /
+                 jnp.sqrt(jnp.mean(ref ** 2)))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 32, 32, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 32)) * 0.2
+    ref = direct_conv2d(x, w, "same")
+
+    # conditioning (paper's motivation): cond₂ of the input transform
+    mc = make_matrices(WinogradSpec(m=4, r=3, base="canonical"))
+    ml = make_matrices(WinogradSpec(m=4, r=3, base="legendre"))
+    emit("cond_BT_canonical", 0, f"{condition_number(np.asarray(mc.BT)):.2f}")
+    emit("cond_BCT_legendre", 0,
+         f"{condition_number(np.asarray(ml.BPT)):.2f}")
+
+    for base in ("canonical", "legendre", "chebyshev"):
+        for hb in (8, 9):
+            for ps in (False, True):
+                q = QuantConfig(hadamard_bits=hb, position_scales=ps)
+                spec = WinogradSpec(m=4, r=3, base=base, quant=q)
+                t0 = time.perf_counter()
+                y = winograd_conv2d(x, w, spec)
+                y.block_until_ready()
+                us = (time.perf_counter() - t0) * 1e6
+                name = f"q8_wino_{base}_had{hb}" + \
+                    ("_posscale" if ps else "")
+                emit(name, us, f"rms_rel_err={rel_err(y, ref):.4f}")
+
+    # fp path sanity rows
+    for base in ("canonical", "legendre"):
+        spec = WinogradSpec(m=4, r=3, base=base, quant=QuantConfig.off())
+        y = winograd_conv2d(x, w, spec)
+        emit(f"fp32_wino_{base}", 0, f"rms_rel_err={rel_err(y, ref):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched serving demo: prefill a prompt batch, then decode with the
+per-family O(1)/KV caches (the same steps the multi-pod dry-run lowers).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6-7b]
+"""
+import argparse
+
+from repro.launch import serve as serve_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_launcher.main(["--arch", args.arch, "--tiny",
+                         "--prompt-len", str(args.prompt_len),
+                         "--decode-len", str(args.decode_len),
+                         "--batch", str(args.batch)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""minitron-4b [dense] — pruned Nemotron (squared-relu style ungated MLP).
+
+32L d_model=3072 24H (GQA kv=8, d_head=128) d_ff=9216 vocab=256000
+[arXiv:2407.14679; hf].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=9216,
+    vocab=256000,
+    act="gelu",                 # ungated 2-matrix MLP (Nemotron relu²-like)
+)

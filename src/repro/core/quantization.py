@@ -1,0 +1,128 @@
+"""Symmetric fake-quantization with straight-through estimators.
+
+Implements the paper's quantization model: symmetric, zero-point-free
+casts applied before/after every Winograd transform stage (Fig. 2), with a
+configurable bit-width per stage — notably the 8-vs-9-bit Hadamard product.
+
+Fake-quant (quantize→dequantize in fp) is used for QAT exactly as in
+Fernandez-Marques et al. 2020; the true-integer helpers at the bottom feed
+the int8 Pallas kernels for inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "qmax",
+    "abs_max_scale",
+    "fake_quant",
+    "quantize_int",
+    "dequantize_int",
+]
+
+
+def qmax(bits: int) -> int:
+    """Largest representable magnitude of a signed symmetric b-bit grid."""
+    return 2 ** (bits - 1) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Per-stage quantization settings for the Winograd pipeline.
+
+    ``None`` bit-widths disable quantization for that stage (fp path).
+    ``hadamard_bits=9`` is the paper's accuracy-recovering option.
+    """
+
+    act_bits: Optional[int] = 8
+    weight_bits: Optional[int] = 8
+    trans_bits: Optional[int] = 8      # after each pre/post transform stage
+    hadamard_bits: Optional[int] = 9   # the Hadamard-product stage
+    matrix_bits: Optional[int] = 8     # the transform matrices themselves
+    per_channel_weights: bool = True
+    # Cast policy for the base-change pipeline: True quantizes the values
+    # between the base-change matmul and the main transform matmul (the
+    # literal reading of the paper's "before and after all transformations");
+    # False casts only at stage boundaries (input/V/U/Hadamard/output), in
+    # which case eq. (4) == eq. (3) exactly for fp32 matrices.
+    cast_between_stages: bool = True
+    # Beyond-paper: per-Winograd-position quantization scales for the
+    # transform-domain tensors (one scale per (i,j) of the n×n grid) instead
+    # of per-tensor. Off by default = faithful to [5]/the paper.
+    position_scales: bool = False
+
+    @classmethod
+    def off(cls) -> "QuantConfig":
+        return cls(act_bits=None, weight_bits=None, trans_bits=None,
+                   hadamard_bits=None, matrix_bits=None)
+
+
+def abs_max_scale(x: jnp.ndarray, bits: int,
+                  axis: Optional[Sequence[int]] = None,
+                  eps: float = 1e-12) -> jnp.ndarray:
+    """Dynamic symmetric scale: amax/qmax, per-tensor or per-channel.
+
+    ``axis`` lists the axes to REDUCE OVER; remaining axes keep their own
+    scale (broadcastable against ``x``).
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = jnp.maximum(amax, eps)
+    return amax / qmax(bits)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _fq(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits))
+    return q * scale
+
+
+def _fq_fwd(x, scale, bits):
+    return _fq(x, scale, bits), (x, scale)
+
+
+def _fq_bwd(bits, res, g):
+    # Saturation STE: identity gradient inside the representable range,
+    # zero outside (the clip saturates). Scale gets no gradient (dynamic).
+    x, scale = res
+    inside = (jnp.abs(x / scale) <= qmax(bits)).astype(g.dtype)
+    return g * inside, jnp.zeros_like(scale)
+
+
+_fq.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant(x: jnp.ndarray, bits: Optional[int],
+               axis: Optional[Sequence[int]] = None,
+               scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Symmetric fake-quantize ``x`` to ``bits``; no-op when bits is None."""
+    if bits is None:
+        return x
+    if scale is None:
+        scale = jax.lax.stop_gradient(abs_max_scale(x, bits, axis=axis))
+    return _fq(x, scale, bits)
+
+
+# ---------------------------------------------------------------------------
+# True-integer helpers (inference / Pallas kernel feeding)
+# ---------------------------------------------------------------------------
+
+def quantize_int(x: jnp.ndarray, bits: int = 8,
+                 axis: Optional[Sequence[int]] = None,
+                 dtype=jnp.int8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize to a true integer array + fp scale. 9-bit grids ride in int16."""
+    scale = abs_max_scale(x, bits, axis=axis)
+    q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits))
+    if bits > 8 and dtype == jnp.int8:
+        dtype = jnp.int16
+    return q.astype(dtype), scale
+
+
+def dequantize_int(q: jnp.ndarray, scale: jnp.ndarray,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    return q.astype(dtype) * scale

@@ -1,0 +1,131 @@
+"""Deterministic synthetic data pipelines (tokens / frames / patches /
+images) with resumable cursors and per-host sharding.
+
+Design for 1000+ nodes: the pipeline is a *pure function of (seed, step,
+host)* — ``batch_at(step)`` — so restart/resume is bitwise-reproducible
+with no data-loader state beyond the integer step in the checkpoint, and
+each host materializes only its slice (``host_batch_slice``).  Swapping in
+a real corpus means replacing ``_synth_tokens`` with a deterministic
+tokenized-shard reader keyed the same way; every other layer is agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "batch_at", "input_specs", "host_batch_slice"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    # vocab etc. come from the model config
+
+
+def host_batch_slice(global_batch: int, process_index: Optional[int] = None,
+                     process_count: Optional[int] = None) -> slice:
+    """The batch rows this host is responsible for materializing."""
+    pi = jax.process_index() if process_index is None else process_index
+    pc = jax.process_count() if process_count is None else process_count
+    per = global_batch // pc
+    return slice(pi * per, (pi + 1) * per)
+
+
+def _fold(seed: int, *vals: int) -> jax.Array:
+    k = jax.random.PRNGKey(seed)
+    for v in vals:
+        k = jax.random.fold_in(k, v)
+    return k
+
+
+def _synth_tokens(key, batch, seq, vocab):
+    """Markov-ish synthetic tokens — compressible, so losses move in
+    training demos (pure iid-uniform gives a flat loss)."""
+    k1, k2 = jax.random.split(key)
+    base = jax.random.randint(k1, (batch, seq), 0, vocab, jnp.int32)
+    # repeat-previous with p=0.5 → learnable bigram structure
+    rep = jax.random.bernoulli(k2, 0.5, (batch, seq))
+    shifted = jnp.concatenate([base[:, :1], base[:, :-1]], axis=1)
+    return jnp.where(rep, shifted, base)
+
+
+def batch_at(model_cfg, seq_len: int, global_batch: int, step: int,
+             seed: int = 0, mode: str = "train") -> dict:
+    """Materialize the full logical batch for `step` (host slicing is the
+    caller's concern; on a single process this is the whole batch)."""
+    key = _fold(seed, step)
+    vocab = model_cfg.vocab
+    if model_cfg.input_mode == "tokens":
+        toks = _synth_tokens(key, global_batch, seq_len + 1, vocab)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if model_cfg.input_mode == "frames":
+        frames = jax.random.normal(
+            key, (global_batch, seq_len, model_cfg.frontend_dim),
+            jnp.float32)
+        labels = jax.random.randint(jax.random.fold_in(key, 1),
+                                    (global_batch, seq_len), 0, vocab)
+        return {"frames": frames, "labels": labels}
+    if model_cfg.input_mode == "patches+tokens":
+        n_text = seq_len - model_cfg.n_prefix
+        toks = _synth_tokens(key, global_batch, n_text + 1, vocab)
+        patches = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (global_batch, model_cfg.n_prefix, model_cfg.frontend_dim),
+            jnp.float32)
+        return {"patches": patches, "tokens": toks[:, :-1],
+                "labels": toks[:, 1:]}
+    raise ValueError(model_cfg.input_mode)
+
+
+def cifar_batch_at(step: int, batch: int, seed: int = 0) -> dict:
+    """Synthetic CIFAR10-like batch with class-dependent structure
+    (learnable): class k tints channel k%3 and shifts a quadrant."""
+    key = _fold(seed, step, 7)
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (batch,), 0, 10)
+    imgs = jax.random.normal(k2, (batch, 32, 32, 3), jnp.float32) * 0.3
+    tint = jax.nn.one_hot(labels % 3, 3) * (labels[:, None] / 10.0 + 0.3)
+    imgs = imgs + tint[:, None, None, :]
+    return {"images": imgs, "labels": labels}
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs for the multi-pod dry-run (no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(model_cfg, seq_len: int, global_batch: int,
+                mode: str = "train") -> dict:
+    """ShapeDtypeStruct stand-ins for every model input.
+
+    ``train``/``prefill`` → full-sequence batches; ``decode`` → one new
+    token + position (the KV cache is part of the decode signature and is
+    built by the launcher via eval_shape on ``init_cache``).
+    """
+    B, S, V = global_batch, seq_len, model_cfg.vocab
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((B,), i32)}
+    if model_cfg.input_mode == "tokens":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif model_cfg.input_mode == "frames":
+        specs = {"frames": jax.ShapeDtypeStruct(
+                     (B, S, model_cfg.frontend_dim), f32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif model_cfg.input_mode == "patches+tokens":
+        n_text = S - model_cfg.n_prefix
+        specs = {"patches": jax.ShapeDtypeStruct(
+                     (B, model_cfg.n_prefix, model_cfg.frontend_dim), f32),
+                 "tokens": jax.ShapeDtypeStruct((B, n_text), i32),
+                 "labels": jax.ShapeDtypeStruct((B, n_text), i32)}
+    else:
+        raise ValueError(model_cfg.input_mode)
+    if mode == "prefill":
+        specs.pop("labels")
+    return specs

@@ -1,0 +1,81 @@
+"""int8 gradient compression for the cross-pod all-reduce (+error feedback).
+
+At multi-pod scale the pod-to-pod links (data-center network / optical
+ICI) are the scarcest bandwidth, and the cross-pod gradient all-reduce is
+the only traffic on them. This module applies the paper's symmetric-int8
+machinery to that exchange:
+
+  * within a pod, gradients reduce in full precision (XLA, fast ICI);
+  * across pods, each leaf is quantized to int8 + one fp32 scale, the
+    int8 payload is exchanged with ``lax.ppermute`` over the "pod" axis,
+    and dequantized sums are accumulated in fp32 — 4× less cross-pod
+    traffic than fp32, 2× less than bf16;
+  * the quantization residual is kept as *error feedback* and added to
+    the next step's gradient (Seide et al. 2014) so compression error
+    does not bias the optimizer.
+
+Implemented with ``jax.shard_map(..., axis_names={"pod"})``: the "pod"
+axis is manual (the int8 ppermute is visibly an s8 collective in the
+HLO), everything else stays under automatic (pjit) partitioning.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["compress_leaf", "decompress_leaf", "compressed_grad_mean",
+           "init_error_state"]
+
+
+def compress_leaf(g: jnp.ndarray, bits: int = 8):
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    err = g - q.astype(g.dtype) * scale.astype(g.dtype)
+    return q, scale, err
+
+
+def decompress_leaf(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def _pod_allreduce_leaf(g, n_pods: int, axis: str = "pod"):
+    """Ring int8 all-reduce over the pod axis (manual collective)."""
+    q, s, err = compress_leaf(g)
+    total = decompress_leaf(q, s, jnp.float32)
+    cur_q, cur_s = q, s
+    for _ in range(n_pods - 1):
+        perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
+        cur_q = jax.lax.ppermute(cur_q, axis, perm)
+        cur_s = jax.lax.ppermute(cur_s, axis, perm)
+        total = total + decompress_leaf(cur_q, cur_s, jnp.float32)
+    return total.astype(g.dtype), err
+
+
+def compressed_grad_mean(grads, err_state, n_pods: int):
+    """Compressed mean over the pod axis, error feedback included.
+
+    MUST be called *inside* a ``jax.shard_map(..., axis_names={"pod"})``
+    region (the launcher's --grad-compression train step does this):
+    ``grads`` are the per-pod gradients, ``err_state`` the per-pod error
+    feedback residual. Returns (global-mean grads, new err_state).
+    """
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + e
+        tot, err = _pod_allreduce_leaf(gf, n_pods)
+        return (tot / n_pods).astype(g.dtype), err
+
+    pairs = jax.tree.map(leaf, grads, err_state)
+    outs = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    errs = jax.tree.map(lambda p: p[1], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return outs, errs
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

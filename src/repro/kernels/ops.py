@@ -1,0 +1,131 @@
+"""Jitted wrappers composing the Pallas kernels into a full int8 Winograd
+convolution (the inference path; QAT uses the fake-quant path in core/).
+
+Pipeline (NHWC):
+    extract tiles (XLA gather)                    → (T, Cin, n, n) fp
+    kernels.input_transform   (fused, 1 HBM pass) → (n², T, Cin) int8
+    kernels.wino_gemm         (MXU int8 GEMMs)    → (n², T, Cout) int32
+    [optional Hadamard requant to 8/9 bits — the paper's knob]
+    kernels.output_transform  (fused, 1 HBM pass) → (T, Cout, m, m) fp
+    reassemble                                    → (N, Ho, Wo, Cout)
+
+Scales: per-Winograd-position symmetric scales. Production serving uses
+*calibrated* scales passed by the caller; when omitted they are derived
+dynamically (an extra XLA reduction — fine for tests/benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import qmax
+from repro.core.winograd import (WinogradMatrices, WinogradSpec,
+                                 _extract_tiles_1d_axis, _pad_amounts,
+                                 make_matrices)
+from repro.kernels import ref as kref
+from repro.kernels.q8_matmul import q8_matmul
+from repro.kernels.wino_gemm import wino_gemm
+from repro.kernels.wino_transform import input_transform, output_transform
+
+__all__ = ["winograd_conv2d_int8", "q8_linear"]
+
+
+def _extract(x: jnp.ndarray, m: int, r: int, n: int, padding: str):
+    N, H, W, C = x.shape
+    lo_h, hi_h, nt_h, Ho = _pad_amounts(H, m, r, padding)
+    lo_w, hi_w, nt_w, Wo = _pad_amounts(W, m, r, padding)
+    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    t = _extract_tiles_1d_axis(xp, xp.shape[1], m, n, nt_h, axis=1)
+    t = _extract_tiles_1d_axis(t, t.shape[3], m, n, nt_w, axis=3)
+    t = jnp.transpose(t, (0, 1, 3, 5, 2, 4))        # (N,th,tw,C,n,n)
+    T = N * nt_h * nt_w
+    return t.reshape(T, C, n, n), (N, nt_h, nt_w, Ho, Wo)
+
+
+def _reassemble(y: jnp.ndarray, geom, m: int) -> jnp.ndarray:
+    N, nt_h, nt_w, Ho, Wo = geom
+    y = y.reshape(N, nt_h, nt_w, -1, m, m)
+    y = jnp.transpose(y, (0, 1, 4, 2, 5, 3))
+    y = y.reshape(N, nt_h * m, nt_w * m, -1)
+    return y[:, :Ho, :Wo, :]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "padding", "interpret",
+                                             "hadamard_bits"))
+def winograd_conv2d_int8(x: jnp.ndarray, w: jnp.ndarray, spec: WinogradSpec,
+                         padding: str = "same",
+                         in_scales: Optional[jnp.ndarray] = None,
+                         hadamard_bits: Optional[int] = None,
+                         interpret: bool = True) -> jnp.ndarray:
+    """True-int8 Winograd conv via the Pallas kernels.
+
+    ``interpret=True`` (default here) runs the kernel bodies on CPU; on a
+    real TPU deployment pass ``interpret=False``.
+    """
+    mats = make_matrices(spec)
+    m, r, n = spec.m, spec.r, spec.n
+    P = n * n
+    tiles, geom = _extract(x, m, r, n, padding)      # (T, Cin, n, n)
+
+    # Weight path: exact fp transform (tiny, offline in production), then
+    # per-position int8 quantization.
+    from repro.core.quantization import QuantConfig
+    fp_spec = WinogradSpec(m=m, r=r, base=spec.base, quant=QuantConfig.off())
+    from repro.core.winograd import transform_weights_2d
+    U = transform_weights_2d(w, fp_spec, mats)       # (Cin, Cout, n, n) fp
+    Uq_src = jnp.moveaxis(U.reshape(*U.shape[:2], P), -1, 0)  # (P,Cin,Cout)
+    s_w = jnp.max(jnp.abs(Uq_src), axis=(1, 2), keepdims=True) / 127.0
+    s_w = jnp.maximum(s_w, 1e-12)
+    Uq = jnp.clip(jnp.round(Uq_src / s_w), -127, 127).astype(jnp.int8)
+
+    # Input path: per-position scales (dynamic unless calibrated).
+    if in_scales is None:
+        v_fp = kref.input_transform_ref(tiles, mats.CinvT, mats.BPT,
+                                        jnp.ones((P, 1)), spec.changes_base)
+        # ref with unit scale returns clipped ints; recompute fp for range:
+        v_fp = kref._sandwich(mats.BPT, kref._sandwich(mats.CinvT, tiles)
+                              if spec.changes_base else tiles)
+        v_fp = jnp.moveaxis(v_fp.reshape(tiles.shape[0], tiles.shape[1], P),
+                            -1, 0)
+        in_scales = jnp.max(jnp.abs(v_fp), axis=(1, 2), keepdims=False)
+        in_scales = jnp.maximum(in_scales, 1e-12).reshape(P, 1) / 127.0
+
+    Xq = input_transform(tiles, mats.CinvT, mats.BPT, in_scales,
+                         changes_base=spec.changes_base, interpret=interpret)
+    H = wino_gemm(Xq, Uq, interpret=interpret)       # (P, T, Cout) int32
+
+    deq = in_scales * s_w.reshape(P, 1)              # (P, 1)
+    if hadamard_bits is not None:
+        # The paper's 8/9-bit Hadamard stage: requantize the int32 products
+        # onto a 2^b-level grid (per position) before the output transform.
+        hf = H.astype(jnp.float32) * deq[:, :, None]
+        s_h = jnp.max(jnp.abs(hf), axis=(1, 2), keepdims=True)
+        s_h = jnp.maximum(s_h, 1e-12) / qmax(hadamard_bits)
+        H = jnp.clip(jnp.round(hf / s_h), -qmax(hadamard_bits),
+                     qmax(hadamard_bits)).astype(jnp.int32)
+        deq = s_h[:, :, 0]
+
+    y = output_transform(H, deq, mats.CinvT, mats.APT, m=m,
+                         changes_base=spec.changes_base, interpret=interpret)
+    return _reassemble(y, geom, m)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def q8_linear(x: jnp.ndarray, w: jnp.ndarray, interpret: bool = True,
+              out_dtype=jnp.float32) -> jnp.ndarray:
+    """Dynamic w8a8 linear: quantize x per-tensor / w per-col, MXU int8 GEMM.
+
+    x: (..., K) fp, w: (K, N) fp → (..., N) fp.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    s_x = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-12) / 127.0
+    s_w = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-12) / 127.0
+    xq = jnp.clip(jnp.round(x2 / s_x), -127, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(w / s_w[None, :]), -127, 127).astype(jnp.int8)
+    y = q8_matmul(xq, wq, s_x, s_w, out_dtype=out_dtype, interpret=interpret)
+    return y.reshape(*lead, -1)

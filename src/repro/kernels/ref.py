@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function mirrors its kernel's contract exactly (same dtypes, layouts
+and quantization semantics) using only jnp ops, so kernel tests can assert
+exact integer equality / fp allclose across shape & dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "wino_gemm_ref",
+    "input_transform_ref",
+    "output_transform_ref",
+    "q8_matmul_ref",
+]
+
+
+def wino_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(P,M,K) int8 · (P,K,N) int8 → (P,M,N) int32, exact."""
+    return jnp.einsum("pmk,pkn->pmn", x.astype(jnp.int32),
+                      w.astype(jnp.int32))
+
+
+def _sandwich(M, X, N=None):
+    if N is None:
+        N = M
+    return jnp.einsum("ij,...jk,lk->...il", M, X, N)
+
+
+def input_transform_ref(tiles: jnp.ndarray, cinvt: jnp.ndarray,
+                        bpt: jnp.ndarray, pos_scale: jnp.ndarray,
+                        changes_base: bool = True) -> jnp.ndarray:
+    """tiles (T,C,n,n) fp32 → (n²,T,C) int8 (matches kernels.input_transform)."""
+    T, C, n, _ = tiles.shape
+    x = tiles.astype(jnp.float32)
+    if changes_base:
+        x = _sandwich(cinvt, x)
+    v = _sandwich(bpt, x)                                   # (T, C, n, n)
+    v = jnp.moveaxis(v.reshape(T, C, n * n), -1, 0)          # (n², T, C)
+    q = jnp.clip(jnp.round(v / pos_scale[:, :, None]), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def output_transform_ref(h: jnp.ndarray, pos_scale: jnp.ndarray,
+                         cinvt: jnp.ndarray, apt: jnp.ndarray, m: int,
+                         changes_base: bool = True) -> jnp.ndarray:
+    """H (n²,T,C) int32 → (T,C,m,m) fp32 (matches kernels.output_transform)."""
+    P, T, C = h.shape
+    n = int(round(P ** 0.5))
+    hf = h.astype(jnp.float32) * pos_scale[:, :, None]
+    hf = jnp.moveaxis(hf, 0, -1).reshape(T, C, n, n)
+    if changes_base:
+        hf = _sandwich(cinvt, hf)
+    return _sandwich(apt, hf)                                # (T, C, m, m)
+
+
+def q8_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, s_x: jnp.ndarray,
+                  s_w: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    """(M,K) int8 · (K,N) int8 with symmetric dequant epilogue."""
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * s_x * s_w[None, :]).astype(out_dtype)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: Winograd-domain batched int8 GEMM.
+
+This is >90% of the FLOPs of a Winograd convolution: for each of the
+``P = n²`` Winograd positions, an independent GEMM over channels
+
+    out[p] = x[p] @ w[p]        x: (P, M, K) int8, w: (P, K, N) int8
+                                out: (P, M, N) int32
+
+where ``M = batch·tiles``, ``K = C_in``, ``N = C_out``.  int8×int8→int32
+is MXU-native on TPU v5e; the kernel tiles M/N/K to 128-aligned VMEM
+blocks and accumulates in the int32 output block across the K grid axis
+(output revisiting on the innermost axis), the canonical Pallas matmul
+schedule.
+
+The TPU is the *target*; correctness is validated in ``interpret=True``
+mode against ``ref.wino_gemm_ref`` (exact integer equality).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["wino_gemm", "DEFAULT_BLOCKS"]
+
+# MXU-aligned defaults: the systolic array is 128×128; K blocks of 256
+# halve the number of grid steps at an acceptable VMEM footprint
+# (128·256 + 256·128 int8 + 128·128 int32 ≈ 128 KiB per step).
+DEFAULT_BLOCKS = (128, 128, 256)
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output block of one position; accumulates over k."""
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, ...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def wino_gemm(x: jnp.ndarray, w: jnp.ndarray,
+              blocks: tuple[int, int, int] | None = None,
+              interpret: bool = False) -> jnp.ndarray:
+    """Batched per-position GEMM. x: (P,M,K) int8, w: (P,K,N) int8 → int32.
+
+    Shapes need not be block-aligned; inputs are zero-padded (zeros are
+    exact in integer arithmetic) and the output is cropped.
+    """
+    P, M, K = x.shape
+    P2, K2, N = w.shape
+    assert P == P2 and K == K2, (x.shape, w.shape)
+    bm, bn, bk = blocks or DEFAULT_BLOCKS
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+
+    xp = _pad_to(_pad_to(x, 1, bm), 2, bk)
+    wp = _pad_to(_pad_to(w, 1, bk), 2, bn)
+    Mp, Kp, Np = xp.shape[1], xp.shape[2], wp.shape[2]
+
+    grid = (P, Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda p, i, j, k: (p, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda p, i, j, k: (p, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda p, i, j, k: (p, i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, Mp, Np), jnp.int32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :M, :N]

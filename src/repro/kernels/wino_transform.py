@@ -1,0 +1,162 @@
+"""Pallas TPU kernels: fused Winograd input/output transforms (+(de)quant).
+
+These are the bandwidth-bound stages of the Winograd pipeline.  On TPU the
+profitable layout keeps channels on the 128-lane minor dimension and the
+tile grid on the sublane dimension, so a block is ``(bt, bc)`` tiles×chans
+with the n×n tile window unrolled into registers — the 6×6 transform
+sandwiches become a fixed sequence of VPU multiply-adds with matrix
+constants (never worth MXU latency at 6×6).
+
+Input transform (fused, one HBM round-trip):
+    tiles (T, C, n, n) fp32  →  C⁻ᵀ·X·C⁻¹ → B_Cᵀ·(·)·B_C → scale→round→clip
+    → (n², T, C) int8 laid out for `wino_gemm` (position-major).
+
+Output transform:
+    H (n², T, C) int32  →  ·deq scale → C⁻ᵀ·(·)·C⁻¹ → A_Cᵀ·(·)·A_C
+    → (T, C, m, m) fp32.
+
+The transform matrices arrive as kernel operands (fp32, whole-array
+blocks): for the *flex* variants they are learnable tensors, so they must
+not be baked into the kernel as compile-time constants.
+
+Scales are computed OUTSIDE the kernel (a cheap XLA reduction) and passed
+in; this keeps the kernel single-pass.  Per-position scales arrive as an
+(n², 1) operand (broadcast against the block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["input_transform", "output_transform"]
+
+
+def _sandwich_unrolled(mat_l, mat_r_t, x, n_in, n_out):
+    """out[a,b] = Σ_{j,k} L[a,j]·x[...,j,k]·Rᵀ[b,k] with x (bt,bc,n,n).
+
+    Unrolled over the (small, static) tile window; each term is a scalar
+    constant × (bt,bc) plane — pure VPU work.
+    """
+    planes = [[None] * n_out for _ in range(n_out)]
+    for a in range(n_out):
+        for b in range(n_out):
+            acc = None
+            for j in range(n_in):
+                for k in range(n_in):
+                    term = mat_l[a, j] * mat_r_t[b, k]
+                    contrib = x[..., j, k] * term
+                    acc = contrib if acc is None else acc + contrib
+            planes[a][b] = acc
+    return planes
+
+
+def _input_kernel(tiles_ref, cinvt_ref, bpt_ref, scale_ref, out_ref, *,
+                  n: int, changes_base: bool):
+    x = tiles_ref[...].astype(jnp.float32)          # (bt, bc, n, n)
+    cinvt = cinvt_ref[...]
+    bpt = bpt_ref[...]
+    if changes_base:
+        planes = _sandwich_unrolled(cinvt, cinvt, x, n, n)
+        x = jnp.stack([jnp.stack(row, -1) for row in planes], -2)
+        x = jnp.moveaxis(x, (-2, -1), (-2, -1))      # (bt, bc, n, n)
+    planes = _sandwich_unrolled(bpt, bpt, x, n, n)
+    # quantize per position: scale_ref is (n*n, 1) in SMEM-like layout
+    for a in range(n):
+        for b in range(n):
+            p = a * n + b
+            s = scale_ref[p, 0]
+            q = jnp.clip(jnp.round(planes[a][b] / s), -127, 127)
+            out_ref[p, ...] = q.astype(jnp.int8)
+
+
+def _output_kernel(h_ref, scale_ref, cinvt_ref, apt_ref, out_ref, *,
+                   n: int, m: int, changes_base: bool):
+    # h_ref: (n², bt, bc) int32 → dequantize per position → sandwich → (m,m)
+    cols = []
+    for p in range(n * n):
+        cols.append(h_ref[p, ...].astype(jnp.float32) * scale_ref[p, 0])
+    h = jnp.stack(cols, -1).reshape(*cols[0].shape, n, n)   # (bt, bc, n, n)
+    cinvt = cinvt_ref[...]
+    apt = apt_ref[...]
+    if changes_base:
+        planes = _sandwich_unrolled(cinvt, cinvt, h, n, n)
+        h = jnp.stack([jnp.stack(row, -1) for row in planes], -2)
+    planes = _sandwich_unrolled(apt, apt, h, n, m)
+    y = jnp.stack([jnp.stack(row, -1) for row in planes], -2)  # (bt,bc,m,m)
+    out_ref[...] = y
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("changes_base", "block",
+                                             "interpret"))
+def input_transform(tiles: jnp.ndarray, cinvt: jnp.ndarray, bpt: jnp.ndarray,
+                    pos_scale: jnp.ndarray, *, changes_base: bool = True,
+                    block: tuple[int, int] = (8, 128),
+                    interpret: bool = False) -> jnp.ndarray:
+    """tiles (T, C, n, n) fp32 → (n², T, C) int8 (position-major for GEMM).
+
+    ``pos_scale``: (n², 1) fp32 quantization scales (per position; replicate
+    a per-tensor scale to all n² rows for the paper-faithful mode).
+    """
+    T, C, n, _ = tiles.shape
+    bt, bc = min(block[0], T), min(block[1], C)
+    tp = _pad_axis(_pad_axis(tiles, 0, bt), 1, bc)
+    Tp, Cp = tp.shape[0], tp.shape[1]
+    grid = (Tp // bt, Cp // bc)
+    out = pl.pallas_call(
+        functools.partial(_input_kernel, n=n, changes_base=changes_base),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bc, n, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((n, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((n, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((n * n, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n * n, bt, bc), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n * n, Tp, Cp), jnp.int8),
+        interpret=interpret,
+    )(tp, cinvt, bpt, pos_scale)
+    return out[:, :T, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "changes_base", "block",
+                                             "interpret"))
+def output_transform(h: jnp.ndarray, pos_scale: jnp.ndarray,
+                     cinvt: jnp.ndarray, apt: jnp.ndarray, *, m: int,
+                     changes_base: bool = True,
+                     block: tuple[int, int] = (8, 128),
+                     interpret: bool = False) -> jnp.ndarray:
+    """H (n², T, C) int32 (+ per-position dequant scales) → (T, C, m, m)."""
+    P, T, C = h.shape
+    n = int(round(P ** 0.5))
+    assert n * n == P
+    bt, bc = min(block[0], T), min(block[1], C)
+    hp = _pad_axis(_pad_axis(h, 1, bt), 2, bc)
+    Tp, Cp = hp.shape[1], hp.shape[2]
+    grid = (Tp // bt, Cp // bc)
+    out = pl.pallas_call(
+        functools.partial(_output_kernel, n=n, m=m,
+                          changes_base=changes_base),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n * n, bt, bc), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n * n, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((n, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, n), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bc, m, m), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, Cp, m, m), jnp.float32),
+        interpret=interpret,
+    )(hp, pos_scale, cinvt, apt)
+    return out[:T, :C]

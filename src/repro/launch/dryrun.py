@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first initialization. 512 host devices
+# back both the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the *real* train/prefill/decode step (the same
+functions train.py/serve.py run), lowers it against ShapeDtypeStruct
+inputs on the production mesh, compiles, and records:
+
+  * ``compiled.memory_analysis()``  — proves the cell fits (bytes/device),
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+
+and writes ``results/dryrun/<arch>__<shape>__<mesh>.json``, which
+benchmarks/roofline.py turns into EXPERIMENTS.md §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+__all__ = ["run_cell", "parse_collective_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[sub]\d+|bf16|f16|f32|f64|c64|c128)"
+                       r"\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        for c in _COLLECTIVES:
+            # match "<type> opname(" — e.g. "bf16[8,128]{1,0} all-gather("
+            m = re.match(r"^(\(?[a-z0-9\[\],{}\(\) ]*?)\s*" + c +
+                         r"(-start|-done)?\(", rhs)
+            if m:
+                if m.group(2) == "-done":
+                    break  # counted at -start
+                out[c] += _shape_bytes(m.group(1))
+                counts[c] += 1
+                break
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts,
+            "total_bytes": sum(out[c] for c in _COLLECTIVES)}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             out_dir: str = "results/dryrun", verbose: bool = True) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, run_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_serve_setup, make_train_setup
+
+    seq, gb, kind = SHAPES[shape]
+    run = run_config(arch, shape, multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+
+    with mesh:
+        if kind == "train":
+            setup = make_train_setup(run, mesh, multi_pod)
+            args = (setup.abstract["params"], setup.abstract["opt"],
+                    setup.abstract["batch"], setup.abstract["step"])
+        elif kind == "prefill":
+            setup = make_serve_setup(run, mesh, multi_pod, "prefill")
+            args = (setup.abstract["params"], setup.abstract["batch"])
+        else:
+            setup = make_serve_setup(run, mesh, multi_pod, "decode")
+            args = (setup.abstract["params"], setup.abstract["cache"],
+                    setup.abstract["tokens"], setup.abstract["pos"])
+        lowered = setup.step_fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_d[attr] = int(getattr(mem, attr))
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float))}
+
+    # Loop-aware per-device analysis (XLA's cost_analysis counts while
+    # bodies once — see repro.analysis.hlo_cost).
+    from repro.analysis.hlo_cost import analyze_hlo
+    hlo_text = compiled.as_text()
+    t0 = time.time()
+    hc = analyze_hlo(hlo_text)
+    t_analyze = time.time() - t0
+    coll = parse_collective_bytes(hlo_text)  # unscaled sanity reference
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": mesh_name, "n_devices": n_dev,
+        "seq_len": seq, "global_batch": gb,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "memory": mem_d,
+        "xla_flops_unscaled": cost_d.get("flops", 0.0),
+        "flops_per_device": hc.flops,
+        "bytes_per_device": hc.bytes,
+        "transcendentals_per_device": hc.transcendentals,
+        "collective_bytes_per_device": hc.collective_bytes,
+        "collective_total_bytes_per_device": sum(
+            hc.collective_bytes.values()),
+        "hlo_warnings": hc.warnings[:20],
+        "collectives_unscaled": coll,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape}__{mesh_name}.json".replace("/", "_")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=2)
+    if verbose:
+        args_b = mem_d.get("argument_size_in_bytes", 0)
+        tmp_b = mem_d.get("temp_size_in_bytes", 0)
+        print(f"[dryrun] {arch:24s} {shape:12s} mesh={mesh_name:8s} "
+              f"lower={t_lower:6.1f}s compile={t_compile:6.1f}s "
+              f"flops/dev={hc.flops:.3e} bytes/dev={hc.bytes:.3e} "
+              f"args={args_b/1e9:.2f}GB temp={tmp_b/1e9:.2f}GB "
+              f"coll/dev={result['collective_total_bytes_per_device']/1e9:.3f}GB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod for each cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--keep-going", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import all_cells
+
+    todo = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, args.out)
+            except Exception as e:       # noqa: BLE001 — report and continue
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[dryrun] FAIL {arch} {shape} multi_pod={mp}: {e}")
+                if not args.keep_going:
+                    traceback.print_exc()
+                    raise
+    if failures:
+        print(f"[dryrun] {len(failures)} failures")
+        raise SystemExit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Mesh factories (functions, never module-level constants — importing
+this module must not touch jax device state).
+
+Production target: TPU v5e pods of 256 chips in a 16×16 ICI torus.
+Single-pod mesh (16, 16) = ("data", "model"); multi-pod adds a leading
+"pod" axis over the data-center interconnect: (2, 16, 16).
+
+``make_mesh_for`` is the elastic entry point: any chip count factors into
+(pods, data, model) with the model axis held at the per-pod TP degree, so
+scaling 256 → 4096 chips is a config change, not a code change (restore
+from checkpoint and relaunch — sharding rules are mesh-shape agnostic).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_for", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 16,
+                  chips_per_pod: int = 256):
+    """Elastic mesh for any device count (1000+-node deployments)."""
+    if n_devices <= chips_per_pod:
+        data = n_devices // model_parallel
+        if data == 0:
+            return jax.make_mesh((1, n_devices), ("data", "model"))
+        return jax.make_mesh((data, model_parallel), ("data", "model"))
+    pods = n_devices // chips_per_pod
+    data = chips_per_pod // model_parallel
+    return jax.make_mesh((pods, data, model_parallel),
+                         ("pod", "data", "model"))
+
+
+def make_host_mesh():
+    """Whatever this host has (tests / examples): (n, 1) data×model."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

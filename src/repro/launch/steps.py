@@ -1,0 +1,262 @@
+"""Step builders: jitted, sharded train / prefill / decode steps.
+
+Shared by the real launchers (train.py, serve.py) and the multi-pod
+dry-run (dryrun.py lowers these exact functions with abstract inputs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.pipeline import input_specs
+from repro.distributed import sharding as shd
+from repro.models import registry
+from repro.models.param import abstract_params, logical_axes
+from repro.optim.optimizer import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["TrainSetup", "make_train_setup", "make_serve_setup"]
+
+
+class TrainSetup:
+    """Bundle: jitted step + shardings + abstract arg trees."""
+
+    def __init__(self, step_fn, shardings, abstract):
+        self.step_fn = step_fn
+        self.shardings = shardings
+        self.abstract = abstract
+
+
+def _dp_axes(rule_map):
+    return rule_map["batch"]
+
+
+def _dp_for_dim(size: int, mesh, rule_map):
+    """Largest DP mapping that divides `size` (batch=1 cells → None)."""
+    dp = _dp_axes(rule_map)
+    cands = [dp] if not isinstance(dp, tuple) else \
+        [dp, dp[-1:], dp[:1], None]
+    for c in ([dp, None] if not isinstance(dp, tuple) else cands):
+        if c is None:
+            return None
+        ext = 1
+        for a in (c if isinstance(c, tuple) else (c,)):
+            ext *= mesh.shape[a]
+        if size % ext == 0:
+            return c
+    return None
+
+
+def _batch_shardings(mesh, batch_tree, rule_map):
+    def leaf(x):
+        dp = _dp_for_dim(x.shape[0], mesh, rule_map)
+        spec = [dp] + [None] * (x.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch_tree)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _loss_with_microbatch(model, cfg, run, mesh, rule_map):
+    """Grad-accumulated loss/grad fn (scan over microbatches)."""
+
+    def plain(params, batch):
+        return jax.value_and_grad(lambda p: model.loss_fn(p, batch,
+                                                          cfg))(params)
+
+    if not run.microbatch or run.microbatch >= run.global_batch:
+        return plain
+
+    n_micro = run.global_batch // run.microbatch
+    dp = _dp_axes(rule_map)
+
+    def accum(params, batch):
+        def reshape(x):
+            y = x.reshape((n_micro, run.microbatch) + x.shape[1:])
+            # keep the batch rows sharded over DP after the fold — without
+            # this constraint GSPMD replicates the microbatches (verified:
+            # per-device FLOPs multiply by n_micro).
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, P(None, dp,
+                                         *([None] * (x.ndim - 1)))))
+        micro = jax.tree.map(reshape, batch)
+
+        def step(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = plain(params, mb)
+            return (loss_acc + loss / n_micro,
+                    jax.tree.map(lambda a, b: a + b / n_micro, g_acc, g)), \
+                None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(step, (jnp.float32(0), g0), micro)
+        return loss, grads
+
+    return accum
+
+
+def make_train_setup(run, mesh, multi_pod: bool) -> TrainSetup:
+    """Build the sharded train step for an LM run config."""
+    cfg = run.model
+    model = registry.get_model(cfg)
+    specs = model.param_specs(cfg)
+    axes = logical_axes(specs)
+    rule_map = shd.rules(fsdp=run.fsdp, multi_pod=multi_pod)
+    abstract_p = abstract_params(specs)
+    p_sh = shd.tree_shardings(mesh, axes, rule_map, abstract_p)
+
+    lr_fn = cosine_schedule(run.lr, run.warmup_steps, run.total_steps)
+    loss_grad = _loss_with_microbatch(model, cfg, run, mesh, rule_map)
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = loss_grad(params, batch)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, lr=lr_fn(step), b1=run.adam_b1,
+            b2=run.adam_b2, weight_decay=run.weight_decay,
+            grad_clip=run.grad_clip)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    moment_dtype = jnp.dtype(run.moment_dtype)
+    abstract_opt = {
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                         moment_dtype),
+                          abstract_p),
+        "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                         moment_dtype),
+                          abstract_p),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    o_sh = {"m": p_sh, "v": p_sh, "count": _replicated(mesh)}
+
+    abstract_batch = input_specs(cfg, run.seq_len, run.global_batch,
+                                 "train")
+    b_sh = _batch_shardings(mesh, abstract_batch, rule_map)
+    m_sh = {"loss": _replicated(mesh), "grad_norm": _replicated(mesh)}
+
+    step_fn = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh, None),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate_argnums=(0, 1),
+    )
+    return TrainSetup(
+        step_fn,
+        {"params": p_sh, "opt": o_sh, "batch": b_sh},
+        {"params": abstract_p, "opt": abstract_opt,
+         "batch": abstract_batch,
+         "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    )
+
+
+def init_train_state(run, setup: TrainSetup, seed: int = 0):
+    """Materialize params/opt with the setup's shardings (real runs)."""
+    cfg = run.model
+    model = registry.get_model(cfg)
+    specs = model.param_specs(cfg)
+    from repro.models.param import init_params
+
+    @functools.partial(jax.jit, out_shardings=setup.shardings["params"])
+    def _init(key):
+        return init_params(specs, key)
+
+    params = _init(jax.random.PRNGKey(seed))
+    moment_dtype = jnp.dtype(run.moment_dtype)
+
+    @functools.partial(jax.jit, out_shardings=setup.shardings["opt"])
+    def _opt(params):
+        return adamw_init(params, moment_dtype)
+
+    return params, _opt(params)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def _cache_pspec(cfg, cache_abstract, mesh, rule_map):
+    """Per-leaf cache shardings: batch over DP; heads/channels over model
+    where divisible (with graceful degradation for batch=1 cells).
+    """
+    msize = mesh.shape["model"]
+
+    def leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = x.ndim
+        dp = _dp_for_dim(x.shape[1], mesh, rule_map) if nd >= 2 else None
+        if name in ("k", "v") and nd == 5:       # (L, B, S, Hkv, dh)
+            if x.shape[3] % msize == 0:
+                return NamedSharding(mesh, P(None, dp, None, "model", None))
+            if x.shape[4] % msize == 0:
+                return NamedSharding(mesh, P(None, dp, None, None, "model"))
+            return NamedSharding(mesh, P(None, dp, None, None, None))
+        if name == "S" and nd == 5:              # (L, B, H, dk, dv)
+            if x.shape[2] % msize == 0:
+                return NamedSharding(mesh, P(None, dp, "model", None, None))
+            return NamedSharding(mesh, P(None, dp, None, None, None))
+        if nd >= 2:
+            spec = [None, dp] + [None] * (nd - 3)
+            # shard the trailing channel dim over model when divisible
+            if x.shape[-1] % msize == 0:
+                spec = spec + ["model"]
+            else:
+                spec = spec + [None]
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_abstract)
+
+
+def make_serve_setup(run, mesh, multi_pod: bool, mode: str):
+    """mode ∈ {"prefill", "decode"} → jitted sharded step + abstracts."""
+    cfg = run.model
+    model = registry.get_model(cfg)
+    specs = model.param_specs(cfg)
+    axes = logical_axes(specs)
+    rule_map = shd.rules(fsdp=run.fsdp, multi_pod=multi_pod)
+    abstract_p = abstract_params(specs)
+    p_sh = shd.tree_shardings(mesh, axes, rule_map, abstract_p)
+    B, S = run.global_batch, run.seq_len
+    dp = _dp_for_dim(B, mesh, rule_map)
+
+    cache_abstract = jax.eval_shape(
+        lambda: model.init_cache(cfg, B, S))
+    c_sh = _cache_pspec(cfg, cache_abstract, mesh, rule_map)
+
+    if mode == "prefill":
+        abstract_batch = input_specs(cfg, S, B, "prefill")
+        b_sh = _batch_shardings(mesh, abstract_batch, rule_map)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, cfg)
+
+        step_fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                          out_shardings=(c_sh, NamedSharding(
+                              mesh, P(dp, None))))
+        return TrainSetup(step_fn, {"params": p_sh, "batch": b_sh,
+                                    "cache": c_sh},
+                          {"params": abstract_p, "batch": abstract_batch})
+
+    assert mode == "decode"
+    dec = input_specs(cfg, S, B, "decode")
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    pos_sh = NamedSharding(mesh, P(dp))
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, cfg)
+
+    step_fn = jax.jit(
+        decode_step,
+        in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+        out_shardings=(NamedSharding(mesh, P(dp, None)), c_sh),
+        donate_argnums=(1,),
+    )
+    return TrainSetup(step_fn, {"params": p_sh, "cache": c_sh},
+                      {"params": abstract_p, "cache": cache_abstract,
+                       "tokens": dec["tokens"], "pos": dec["pos"]})

@@ -1,0 +1,364 @@
+"""Shared model building blocks (pure functions over param pytrees).
+
+Everything here is shard_map/pjit friendly: no global state, explicit
+params, jax.lax control flow only.  Attention is blockwise (flash-style
+running-softmax over KV chunks) so 32k-prefill activations never
+materialize S×S score matrices; sliding-window attention touches only the
+chunks inside the window (sub-quadratic — this is what makes the 500k
+cells runnable for the hybrid/SSM archs).
+
+The paper's quantization substrate plugs in via ``linear(..., q8=True)``
+(symmetric w8a8 fake-quant, QAT semantics) — the true-int8 Pallas path
+lives in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fake_quant
+
+DEFAULT_CHUNK = 1024
+
+
+def _ambient_mesh():
+    """The mesh installed by the launcher's ``with mesh:`` (or None)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return m if m.axis_names else None
+    except Exception:          # noqa: BLE001 — no mesh context
+        return None
+
+
+def constrain_leading_dp(x: jnp.ndarray, *trailing) -> jnp.ndarray:
+    """Constrain dim 0 onto the data-parallel mesh axes (framework axis
+    naming convention: "pod"/"data"). No-op without a mesh context or when
+    the dim does not divide. ``trailing`` optionally names later dims."""
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in m.axis_names)
+    if not dp:
+        return x
+    ext = 1
+    for a in dp:
+        ext *= m.shape[a]
+    if x.shape[0] % ext != 0:
+        return x
+    rest = list(trailing) + [None] * (x.ndim - 1 - len(trailing))
+    for i, r in enumerate(rest):
+        if r is not None and (r not in m.axis_names or
+                              x.shape[i + 1] % m.shape[r] != 0):
+            rest[i] = None
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(dp, *rest))
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def grad_cast(x):
+    """Identity whose BACKWARD casts the cotangent to x's dtype.
+
+    The attention-score einsums accumulate in f32 (softmax stability); by
+    default their f32 cotangents then propagate through every projection
+    backward, turning all tensor-parallel activation all-reduces into f32
+    (measured: ~70% of llama3.2-1b train collective bytes were f32
+    backward ARs). A barrier on q/k/v restores bf16 gradient comms —
+    exactly what hand-written flash-attention backward kernels do.
+    """
+    return x
+
+
+def _grad_cast_fwd(x):
+    # residuals must be jax types: carry the dtype via a 0-size array
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _grad_cast_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray] = None,
+           q8: bool = False) -> jnp.ndarray:
+    """x @ w (+ b); optional symmetric w8a8 fake-quant (paper substrate)."""
+    if q8:
+        x = fake_quant(x, 8)
+        w = fake_quant(w, 8, axis=tuple(range(w.ndim - 1)))
+    y = jnp.einsum("...k,k...->..." if w.ndim == 1 else "...k,kn->...n", x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """Rotary embedding. x: (..., S, H, dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention
+# ---------------------------------------------------------------------------
+
+def _chunked_attn(q, k, v, *, causal: bool, chunk: int,
+                  window: Optional[int] = None):
+    """Running-softmax attention. q: (B,S,Hkv,G,dh); k,v: (B,S,Hkv,dh).
+
+    Scans KV chunks with an (acc, m, l) carry per query chunk; queries are
+    mapped over chunks so peak memory is O(cq·ck) per (batch, head).
+    ``window`` keeps only KV chunks overlapping the sliding window —
+    off-window chunks are never loaded (sub-quadratic).
+    """
+    B, S, Hkv, G, dh = q.shape
+    Sk = k.shape[1]
+    cq = min(chunk, S)
+    ck = min(chunk, Sk)
+    nq, nk = S // cq, Sk // ck
+    assert S % cq == 0 and Sk % ck == 0, (S, Sk, chunk)
+    scale = dh ** -0.5
+
+    qc = q.reshape(B, nq, cq, Hkv, G, dh)
+    kc = k.reshape(B, nk, ck, Hkv, dh)
+    vc = v.reshape(B, nk, ck, Hkv, dh)
+
+    # Which KV chunks each query chunk needs (static band for windows).
+    if window is not None:
+        nband = min(nk, window // ck + 1)
+    else:
+        nband = nk
+
+    def one_q_chunk(qi, qblk):
+        # qblk: (B, cq, Hkv, G, dh)
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, j):
+            acc, m, l = carry
+            if window is None:
+                jj, band_ok = j, jnp.bool_(True)
+            else:
+                raw = qi - (nband - 1) + j
+                band_ok = raw >= 0          # dedup clamped leading chunks
+                jj = jnp.maximum(raw, 0)
+            kblk = jax.lax.dynamic_index_in_dim(kc, jj, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, jj, 1, keepdims=False)
+            k_pos = jj * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask[None, None, None] & band_ok, s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Hkv, G, cq, dh), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(nband))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B, Hkv, G, cq, dh)
+
+    outs = jax.lax.map(lambda i: one_q_chunk(i, jax.lax.dynamic_index_in_dim(
+        qc, i, 1, keepdims=False)), jnp.arange(nq))
+    # (nq, B, Hkv, G, cq, dh) → (B, S, Hkv, G, dh)
+    outs = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    return outs.reshape(B, S, Hkv, G, dh).astype(q.dtype)
+
+
+def attention(params: dict, x: jnp.ndarray, cfg, *, window=None,
+              causal=True, positions=None, return_kv: bool = False):
+    """GQA multi-head attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    q8 = cfg.quantize_linears
+    b = params.get("bq")
+    q = linear(x, params["wq"], b, q8=q8).reshape(B, S, Hkv, G, dh)
+    k = linear(x, params["wk"], params.get("bk"), q8=q8).reshape(B, S, Hkv, dh)
+    v = linear(x, params["wv"], params.get("bv"), q8=q8).reshape(B, S, Hkv, dh)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = rope(q.reshape(B, S, H, dh), positions, cfg.rope_theta
+             ).reshape(B, S, Hkv, G, dh)
+    k = rope(k, positions, cfg.rope_theta)
+    q, k, v = grad_cast(q), grad_cast(k), grad_cast(v)
+    o = _chunked_attn(q, k, v, causal=causal, window=window,
+                      chunk=min(DEFAULT_CHUNK, S))
+    o = o.reshape(B, S, H * dh)
+    out = linear(o, params["wo"], q8=q8)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(params: dict, x: jnp.ndarray, cache: dict, pos,
+                     cfg, *, window=None, rope_pos=None, mask_pos=None):
+    """One-token decode. x: (B, 1, d); cache: {"k","v"}: (B, Smax, Hkv, dh).
+
+    Returns (out, new_cache). ``pos``: (B,) cache write position (physical);
+    ``rope_pos``/``mask_pos`` default to ``pos`` but differ for ring-buffer
+    (sliding-window) caches, where logical and physical positions diverge.
+    """
+    B = x.shape[0]
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    if rope_pos is None:
+        rope_pos = pos
+    if mask_pos is None:
+        mask_pos = pos
+    q8 = cfg.quantize_linears
+    q = linear(x, params["wq"], params.get("bq"), q8=q8).reshape(B, 1, H, dh)
+    k = linear(x, params["wk"], params.get("bk"), q8=q8).reshape(B, 1, Hkv, dh)
+    v = linear(x, params["wv"], params.get("bv"), q8=q8).reshape(B, 1, Hkv, dh)
+    q = rope(q, rope_pos[:, None], cfg.rope_theta).reshape(B, Hkv, G, dh)
+    k = rope(k, rope_pos[:, None], cfg.rope_theta)
+    ck = jax.vmap(lambda c, kk, p: jax.lax.dynamic_update_slice_in_dim(
+        c, kk, p, 0))(cache["k"], k, pos)
+    cv = jax.vmap(lambda c, vv, p: jax.lax.dynamic_update_slice_in_dim(
+        c, vv, p, 0))(cache["v"], v, pos)
+    Smax = ck.shape[1]
+    k_pos = jnp.arange(Smax)[None, :]
+    valid = k_pos <= mask_pos[:, None]
+    if window is not None:
+        valid &= k_pos > mask_pos[:, None] - window
+    s = jnp.einsum("bhgd,bshd->bhgs", q, ck,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H * dh).astype(x.dtype)
+    return linear(o, params["wo"], q8=q8), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def mlp(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    q8 = cfg.quantize_linears
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        g = linear(x, params["w_gate"], params.get("b_gate"), q8=q8)
+        u = linear(x, params["w_up"], params.get("b_up"), q8=q8)
+        h = act(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = linear(x, params["w_up"], params.get("b_up"), q8=q8)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return linear(h, params["w_down"], params.get("b_down"), q8=q8)
+
+
+def moe(params: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE with *grouped* capacity-based sort dispatch.
+
+    x: (B, S, d) → (out, aux_loss). Expert tensors are (E, …) — sharded
+    over the "experts" logical axis (EP on the model mesh axis).
+
+    Dispatch locality: tokens fold into ``cfg.moe_groups`` groups (the
+    launcher sets this to the data-parallel extent) and every group sorts/
+    scatters into its own capacity buffer (G, E, cap_g, d). With the group
+    dim sharded over DP, the argsort/scatter/gather run shard-local and
+    the only cross-device movement is the token→expert all-to-all over the
+    model axis — without groups, GSPMD all-reduces the full dispatch
+    buffer per layer per microbatch (measured 6.2 TB/device/step on
+    qwen2-moe train_4k; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = getattr(cfg, "moe_groups", 0) or 1
+    if T % G != 0:
+        G = 1
+    Tg = T // G
+    cap = min(int(cfg.capacity_factor * Tg * k / E + 1), Tg)
+    xg = constrain_leading_dp(x.reshape(G, Tg, d))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["w_router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)                   # (G, Tg, E)
+    gate, idx = jax.lax.top_k(probs, k)                  # (G, Tg, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing aux loss (global statistics).
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], E), (0, 1))
+    aux = E * jnp.sum(density * jnp.mean(probs, (0, 1)))
+
+    flat_e = idx.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=1)                  # stable, per group
+    sorted_e = jnp.take_along_axis(flat_e, order, 1)
+    start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(
+        sorted_e)                                        # (G, E)
+    pos = jnp.arange(Tg * k)[None] - jnp.take_along_axis(start, sorted_e, 1)
+    keep = pos < cap
+    tok = order // k                                     # (G, Tg·k)
+    # dropped tokens get an out-of-bounds position → write is dropped
+    safe_pos = jnp.where(keep, pos, cap)
+
+    gi = jnp.arange(G)[:, None]
+    buf = jnp.zeros((G, E, cap, d), x.dtype)
+    buf = buf.at[gi, sorted_e, safe_pos].set(
+        jnp.take_along_axis(xg, tok[..., None], 1), mode="drop")
+    # Group dim on DP; buf stays REPLICATED across the model axis — each
+    # model shard slices its local experts inside the weight einsum, so
+    # the scatter is shard-local. (Sharding buf's E dim instead forces a
+    # cross-model scatter: measured 21× collective regression on kimi.)
+    buf = constrain_leading_dp(buf)
+
+    h1 = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    h2 = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h2
+    y_e = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    y_e = constrain_leading_dp(y_e)
+
+    y_tok = y_e[gi, sorted_e, safe_pos]                  # (G, Tg·k, d)
+    y_tok = constrain_leading_dp(y_tok)
+    w = jnp.where(keep, jnp.take_along_axis(
+        gate.reshape(G, Tg * k), order, 1), 0.0)
+    out = jnp.zeros((G, Tg, d), jnp.float32)
+    out = out.at[gi, tok].add(y_tok.astype(jnp.float32) * w[..., None])
+    out = constrain_leading_dp(out)
+    if "shared" in params:
+        out = out + mlp(params["shared"], xg, cfg).astype(jnp.float32)
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,91 @@
+"""Parameter-spec machinery: one declaration → init / abstract / sharding.
+
+Every model declares its parameters once as a pytree of :class:`ParamSpec`
+(shape + logical axis names + init). From that single declaration we derive
+
+  * ``init_params``      — materialized arrays (PRNG-keyed),
+  * ``abstract_params``  — ShapeDtypeStructs (for ``jit.lower`` dry-runs,
+                           no host allocation),
+  * ``logical_axes``     — a congruent pytree of logical-axis-name tuples,
+                           consumed by ``repro.distributed.sharding`` to
+                           produce PartitionSpecs per mesh/rule-set.
+
+This is the MaxText "logical axis" pattern without a flax dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "logical_axes",
+           "param_count", "param_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]     # logical axis name per dim
+    init: str = "normal"                # normal | zeros | ones | scaled
+    scale: float = 1.0                  # stddev multiplier / fan-in override
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(spec: ParamSpec, key: jax.Array) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        # fan-in scaled truncated-normal-ish init (plain normal is fine here)
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a pytree of ParamSpec with per-leaf folded keys."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct pytree — for .lower() without allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def logical_axes(specs):
+    """Congruent pytree of logical-axis tuples."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(math.prod(s.shape) for s in
+               jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def param_bytes(specs) -> int:
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))

@@ -1,0 +1,25 @@
+"""family → model implementation dispatch."""
+from __future__ import annotations
+
+from repro.models import rglru, rwkv6, transformer
+
+__all__ = ["get_model"]
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "audio": transformer,
+    "vlm": transformer,
+    "hybrid": rglru,
+    "ssm": rwkv6,
+}
+
+
+def get_model(cfg):
+    """Return the module implementing param_specs/forward/loss_fn/
+    init_cache/decode_step for this config's family."""
+    try:
+        return _FAMILY_MODULES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} "
+                         f"(cnn lives in repro.models.resnet)") from None

@@ -1,0 +1,199 @@
+"""ResNet18-CIFAR10 with Winograd-aware quantized convolutions — the
+paper's own experimental model (channel multiplier 0.25 / 0.5 / 1.0).
+
+Every stride-1 3×3 convolution runs through the paper's pipeline
+(``repro.core.winograd.winograd_conv2d``, F(4×4,3×3), canonical or
+Legendre base, static or flex, 8/9-bit Hadamard). Stride-2 convolutions
+and 1×1 shortcuts use direct convolution (outside the Winograd regime),
+exactly as in [5]'s reference code.
+
+BatchNorm keeps running statistics in a separate ``state`` pytree
+(functional: train_step returns the updated state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import (WinogradSpec, direct_conv2d, flex_init,
+                                 make_matrices, winograd_conv2d)
+from repro.models.param import ParamSpec
+
+__all__ = ["ResNetConfig", "param_specs", "state_specs", "forward",
+           "loss_fn", "NUM_CLASSES"]
+
+NUM_CLASSES = 10
+_STAGES = (2, 2, 2, 2)          # ResNet18 basic blocks per stage
+_WIDTHS = (64, 128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet18-cifar10"
+    family: str = "cnn"
+    width_mult: float = 0.5      # the paper's channel multiplier
+    wino: Optional[WinogradSpec] = WinogradSpec(
+        m=4, r=3, base="legendre", quant=QuantConfig())
+    use_winograd: bool = True    # False → direct conv everywhere (baseline)
+    flex: bool = False           # learnable transform matrices
+    num_classes: int = NUM_CLASSES
+    param_dtype: str = "float32"
+    bn_momentum: float = 0.9
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def widths(self):
+        return tuple(max(8, int(w * self.width_mult)) for w in _WIDTHS)
+
+
+def _conv_spec(cin, cout, k, cfg):
+    return ParamSpec((k, k, cin, cout), (None, None, "embed", "mlp"),
+                     scale=1.0, dtype=cfg.dtype)
+
+
+def _bn_spec(c, cfg):
+    return {"scale": ParamSpec((c,), (None,), init="ones", dtype=cfg.dtype),
+            "bias": ParamSpec((c,), (None,), init="zeros", dtype=cfg.dtype)}
+
+
+def _bn_state_spec(c, cfg):
+    return {"mean": ParamSpec((c,), (None,), init="zeros",
+                              dtype=jnp.float32),
+            "var": ParamSpec((c,), (None,), init="ones", dtype=jnp.float32)}
+
+
+def _block_specs(cin, cout, stride, cfg):
+    s = {
+        "conv1": _conv_spec(cin, cout, 3, cfg),
+        "bn1": _bn_spec(cout, cfg),
+        "conv2": _conv_spec(cout, cout, 3, cfg),
+        "bn2": _bn_spec(cout, cfg),
+    }
+    if stride != 1 or cin != cout:
+        s["proj"] = _conv_spec(cin, cout, 1, cfg)
+        s["bn_proj"] = _bn_spec(cout, cfg)
+    return s
+
+
+def _block_state(cin, cout, stride, cfg):
+    s = {"bn1": _bn_state_spec(cout, cfg), "bn2": _bn_state_spec(cout, cfg)}
+    if stride != 1 or cin != cout:
+        s["bn_proj"] = _bn_state_spec(cout, cfg)
+    return s
+
+
+def _iter_blocks(cfg):
+    cin = cfg.widths[0]
+    for si, (n, cout) in enumerate(zip(_STAGES, cfg.widths)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            yield f"s{si}b{bi}", cin, cout, stride
+            cin = cout
+
+
+def param_specs(cfg: ResNetConfig) -> dict:
+    w0 = cfg.widths[0]
+    specs = {
+        "stem": _conv_spec(3, w0, 3, cfg),
+        "bn_stem": _bn_spec(w0, cfg),
+        "head": ParamSpec((cfg.widths[-1], cfg.num_classes),
+                          ("embed", None), dtype=cfg.dtype),
+        "head_b": ParamSpec((cfg.num_classes,), (None,), init="zeros",
+                            dtype=cfg.dtype),
+        "blocks": {nm: _block_specs(ci, co, st, cfg)
+                   for nm, ci, co, st in _iter_blocks(cfg)},
+    }
+    if cfg.use_winograd and cfg.flex and cfg.wino is not None:
+        fx = flex_init(cfg.wino)
+        specs["wino_flex"] = {
+            k: ParamSpec(tuple(v.shape), (None,) * v.ndim, init="zeros",
+                         dtype=jnp.float32) for k, v in fx.items()}
+    return specs
+
+
+def state_specs(cfg: ResNetConfig) -> dict:
+    w0 = cfg.widths[0]
+    return {"bn_stem": _bn_state_spec(w0, cfg),
+            "blocks": {nm: _block_state(ci, co, st, cfg)
+                       for nm, ci, co, st in _iter_blocks(cfg)}}
+
+
+def init_flex(cfg: ResNetConfig):
+    """Proper flex init values (analytic matrices, not zeros)."""
+    return flex_init(cfg.wino) if (cfg.use_winograd and cfg.flex) else None
+
+
+def _bn(x, p, st, training: bool, momentum: float):
+    if training:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new = {"mean": momentum * st["mean"] + (1 - momentum) * mu,
+               "var": momentum * st["var"] + (1 - momentum) * var}
+    else:
+        mu, var = st["mean"], st["var"]
+        new = st
+    y = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return y * p["scale"] + p["bias"], new
+
+
+def _conv3x3(x, w, cfg, stride, mats, flex):
+    if stride == 1 and cfg.use_winograd and cfg.wino is not None:
+        return winograd_conv2d(x, w, cfg.wino, mats=mats, flex=flex,
+                               padding="same")
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def forward(params, state, images, cfg: ResNetConfig, training: bool = False):
+    """images: (B, 32, 32, 3) → logits (B, classes), new_state."""
+    mats = make_matrices(cfg.wino) if cfg.wino is not None else None
+    flex = params.get("wino_flex")
+    mom = cfg.bn_momentum
+    new_state = {"blocks": {}}
+
+    x = _conv3x3(images, params["stem"], cfg, 1, mats, flex)
+    x, new_state["bn_stem"] = _bn(x, params["bn_stem"], state["bn_stem"],
+                                  training, mom)
+    x = jax.nn.relu(x)
+
+    for nm, cin, cout, stride in _iter_blocks(cfg):
+        p, st = params["blocks"][nm], state["blocks"][nm]
+        ns = {}
+        h = _conv3x3(x, p["conv1"], cfg, stride, mats, flex)
+        h, ns["bn1"] = _bn(h, p["bn1"], st["bn1"], training, mom)
+        h = jax.nn.relu(h)
+        h = _conv3x3(h, p["conv2"], cfg, 1, mats, flex)
+        h, ns["bn2"] = _bn(h, p["bn2"], st["bn2"], training, mom)
+        if "proj" in p:
+            sc = jax.lax.conv_general_dilated(
+                x, p["proj"], (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            sc, ns["bn_proj"] = _bn(sc, p["bn_proj"], st["bn_proj"],
+                                    training, mom)
+        else:
+            sc = x
+        x = jax.nn.relu(h + sc)
+        new_state["blocks"][nm] = ns
+
+    x = jnp.mean(x, axis=(1, 2))
+    logits = x @ params["head"] + params["head_b"]
+    return logits, new_state
+
+
+def loss_fn(params, state, batch, cfg: ResNetConfig, training: bool = True):
+    logits, new_state = forward(params, state, batch["images"], cfg,
+                                training)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, -1)
+    ll = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, (new_state, acc)

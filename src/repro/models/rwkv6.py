@@ -1,0 +1,272 @@
+"""RWKV-6 "Finch": attention-free LM with data-dependent per-channel decay.
+
+Time mixing is a diagonal-decay matrix-state recurrence per head:
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    o_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+computed with the chunked formulation (parallel intra-chunk einsums +
+``lax.scan`` across chunks carrying S) — the standard TPU-friendly
+linear-attention schedule; decode is a single O(1) state update.
+
+Data-dependent pieces follow the Finch paper: ddlerp token-shift mixing
+with low-rank adapters, and w_t from a LoRA on the shifted mix.  Channel
+mix is the RWKV squared-ReLU MLP with token shift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.models.transformer import _apply_norm, _norm_spec
+
+__all__ = ["param_specs", "forward", "loss_fn", "init_cache", "decode_step"]
+
+_LORA = 64        # low-rank adapter width for ddlerp / decay
+_CHUNK = 8        # time-mix chunk: with the decay clamp below, intra-chunk
+                  # 1/decay products stay within fp32 range (e^±64)
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def _tm_specs(cfg, lead):
+    d = cfg.d_model
+    la = ("layers",) * len(lead)
+    s = {
+        "mu_x": ParamSpec(lead + (len(_MIX), d), la + (None, "embed"),
+                          init="zeros", dtype=cfg.dtype),
+        "lora_A": ParamSpec(lead + (len(_MIX), d, _LORA),
+                            la + (None, "embed", None), dtype=cfg.dtype),
+        "lora_B": ParamSpec(lead + (len(_MIX), _LORA, d),
+                            la + (None, None, "embed"), dtype=cfg.dtype),
+        "w0": ParamSpec(lead + (d,), la + (None,), init="zeros",
+                        dtype=jnp.float32),
+        "u": ParamSpec(lead + (d,), la + (None,), init="zeros",
+                       dtype=jnp.float32),
+    }
+    for z in ("r", "k", "v", "g"):
+        s[f"w_{z}"] = ParamSpec(lead + (d, d), la + ("embed", "heads"),
+                                dtype=cfg.dtype)
+    s["w_o"] = ParamSpec(lead + (d, d), la + ("heads", "embed"),
+                         dtype=cfg.dtype)
+    s["ln_x"] = ParamSpec(lead + (d,), la + (None,), init="ones",
+                          dtype=jnp.float32)
+    return s
+
+
+def _cm_specs(cfg, lead):
+    d, f = cfg.d_model, cfg.d_ff
+    la = ("layers",) * len(lead)
+    return {
+        "mu_k": ParamSpec(lead + (d,), la + ("embed",), init="zeros",
+                          dtype=cfg.dtype),
+        "mu_r": ParamSpec(lead + (d,), la + ("embed",), init="zeros",
+                          dtype=cfg.dtype),
+        "w_k": ParamSpec(lead + (d, f), la + ("embed", "mlp"),
+                         dtype=cfg.dtype),
+        "w_v": ParamSpec(lead + (f, d), la + ("mlp", "embed"),
+                         dtype=cfg.dtype),
+        "w_r": ParamSpec(lead + (d, d), la + ("embed", "embed"),
+                         dtype=cfg.dtype),
+    }
+
+
+def param_specs(cfg) -> dict:
+    Lyr = cfg.n_layers
+    lead = (Lyr,)
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           init="embed", scale=0.02, dtype=cfg.dtype),
+        "blocks": {
+            "ln_tm": _norm_spec(cfg, lead),
+            "tm": _tm_specs(cfg, lead),
+            "ln_cm": _norm_spec(cfg, lead),
+            "cm": _cm_specs(cfg, lead),
+        },
+        "ln_f": _norm_spec(cfg),
+        "unembed": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                             dtype=cfg.dtype),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` at t=0). x: (B, T, d)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """Finch data-dependent lerp → the five mixed streams (B,T,5,d)."""
+    dx = xx - x
+    base = x[:, :, None] + dx[:, :, None] * p["mu_x"][None, None]
+    lo = jnp.tanh(jnp.einsum("btzd,zdr->btzr", base, p["lora_A"]))
+    adapt = jnp.einsum("btzr,zrd->btzd", lo, p["lora_B"])
+    return x[:, :, None] + dx[:, :, None] * (p["mu_x"][None, None] + adapt)
+
+
+def _time_mix_chunked(r, k, v, w, u, n_heads, dh, state0=None):
+    """Chunked linear attention with per-channel decay.
+
+    r,k,v,w: (B, T, H, dh) with w ∈ (0,1) decay. Returns (out, state_end);
+    state: (B, H, dh, dh) (k-major).
+    """
+    B, T, H, _ = r.shape
+    c = min(_CHUNK, T)
+    assert T % c == 0
+    n = T // c
+    rc = r.reshape(B, n, c, H, dh)
+    kc = k.reshape(B, n, c, H, dh)
+    vc = v.reshape(B, n, c, H, dh)
+    wc = w.reshape(B, n, c, H, dh)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-8))
+    # D[t] = Π_{s<=t} w_s within chunk (inclusive); Dm = D[t-1] (exclusive)
+    cum = jnp.cumsum(logw, axis=2)
+    D = jnp.exp(cum)                        # (B,n,c,H,dh)
+    Dm = jnp.exp(cum - logw)                # exclusive
+    Dtot = jnp.exp(cum[:, :, -1])           # (B,n,H,dh)
+
+    # intra-chunk: A[t,i] = (r_t ⊙ Dm_t) · (k_i / D_i)  for i<t; diag u·r·k
+    r_d = rc * Dm
+    k_d = kc / jnp.maximum(D, 1e-30)
+    att = jnp.einsum("bnthd,bnihd->bnhti", r_d, k_d)
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)
+    att = jnp.where(tri[None, None, None], att, 0.0)
+    diag = jnp.einsum("bnthd,bnthd->bnth", rc * u[None, None, None], kc)
+    intra = jnp.einsum("bnhti,bnihd->bnthd", att, vc) + \
+        diag[..., None] * vc
+
+    # Cross-chunk: S_end = diag(Dtot)·S0 + Σ_i diag(Dtot/D_i)·k_i v_iᵀ,
+    # inter-chunk outputs read the carried state: o_t += (r_t ⊙ Dm_t)·S.
+    def chunk_step(S, inp):
+        rdi, kci, vi, Di, Dti = inp
+        inter = jnp.einsum("bthd,bhde->bthe", rdi, S)
+        kw = kci * (Dti[:, None] / jnp.maximum(Di, 1e-30))
+        S_new = S * Dti[..., None] + jnp.einsum("bthd,bthe->bhde", kw, vi)
+        return S_new, inter
+
+    S0 = state0 if state0 is not None else \
+        jnp.zeros((B, H, dh, dh), jnp.float32)
+    xs = (jnp.moveaxis(r_d, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(D, 1, 0),
+          jnp.moveaxis(Dtot, 1, 0))
+    S_end, inter = jax.lax.scan(chunk_step, S0, xs)
+    inter = jnp.moveaxis(inter, 0, 1)        # (B,n,c,H,dh)
+    out = (intra + inter).reshape(B, T, H, dh)
+    return out, S_end
+
+
+def _time_mix(p, x, cfg, last=None, state0=None):
+    B, T, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    xx = _shift(x, last)
+    mixed = _ddlerp(p, x.astype(jnp.float32), xx.astype(jnp.float32))
+    mr, mk, mv, mw, mg = [mixed[:, :, i] for i in range(5)]
+    r = (mr.astype(cfg.dtype) @ p["w_r"]).reshape(B, T, H, dh)
+    k = (mk.astype(cfg.dtype) @ p["w_k"]).reshape(B, T, H, dh)
+    v = (mv.astype(cfg.dtype) @ p["w_v"]).reshape(B, T, H, dh)
+    g = jax.nn.silu((mg.astype(cfg.dtype) @ p["w_g"]).astype(jnp.float32))
+    lw = jnp.tanh(jnp.einsum("btd,dr->btr", mw, p["lora_A"][3].astype(
+        jnp.float32))) @ p["lora_B"][3].astype(jnp.float32)
+    # Clamp the decay rate (standard in RWKV impls; official kernels work
+    # in log space). Backward of the chunked form squares the intra-chunk
+    # 1/decay products, so the exponent budget is 2·chunk·clamp ≤ ~88
+    # (fp32): clamp 4, chunk 8 → e^±64 worst case.
+    w = jnp.exp(-jnp.minimum(jnp.exp(p["w0"][None, None] + lw), 4.0))
+    w = w.reshape(B, T, H, dh)
+    u = p["u"].reshape(H, dh)
+    out, S = _time_mix_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), w, u, H, dh, state0)
+    # group-norm per head (ln_x), then gate and project
+    o = out.reshape(B, T, H, dh)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 1e-5)
+    o = o.reshape(B, T, d) * p["ln_x"][None, None]
+    o = (o * g).astype(cfg.dtype) @ p["w_o"]
+    return o, (x[:, -1], S)
+
+
+def _channel_mix(p, x, cfg, last=None):
+    xx = _shift(x, last)
+    xk = x + (xx - x) * p["mu_k"][None, None].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_r"][None, None].astype(x.dtype)
+    k = jnp.square(jax.nn.relu((xk @ p["w_k"]).astype(jnp.float32)))
+    kv = k.astype(cfg.dtype) @ p["w_v"]
+    return jax.nn.sigmoid((xr @ p["w_r"]).astype(jnp.float32)
+                          ).astype(cfg.dtype) * kv, x[:, -1]
+
+
+def hidden_forward(params, batch, cfg, collect_state: bool = False):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+
+    def body(carry, lp):
+        h = carry
+        hn = _apply_norm(lp["ln_tm"], h, cfg)
+        o, (tm_last, S) = _time_mix(lp["tm"], hn, cfg)
+        h = h + o
+        hn = _apply_norm(lp["ln_cm"], h, cfg)
+        o, cm_last = _channel_mix(lp["cm"], hn, cfg)
+        ys = (S, tm_last, cm_last) if collect_state else None
+        return h + o, ys
+
+    if cfg.remat and not collect_state:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    return _apply_norm(params["ln_f"], x, cfg), states
+
+
+def forward(params, batch, cfg):
+    x, _ = hidden_forward(params, batch, cfg)
+    return (x @ params["unembed"]).astype(jnp.float32), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg):
+    from repro.models.losses import chunked_ce
+    x, _ = hidden_forward(params, batch, cfg)
+    return chunked_ce(x, params["unembed"], batch["labels"])
+
+
+def prefill(params, batch, cfg):
+    """Prompt → (O(1) decode cache, last-token logits)."""
+    x, (S, tml, cml) = hidden_forward(params, batch, cfg,
+                                      collect_state=True)
+    logits = (x[:, -1] @ params["unembed"]).astype(jnp.float32)
+    return {"S": S, "tm_last": tml, "cm_last": cml}, logits
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) state (matrix state + token-shift memories)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    Lyr = cfg.n_layers
+    return {
+        "S": jnp.zeros((Lyr, batch, H, cfg.rwkv_head_dim,
+                        cfg.rwkv_head_dim), jnp.float32),
+        "tm_last": jnp.zeros((Lyr, batch, cfg.d_model), cfg.dtype),
+        "cm_last": jnp.zeros((Lyr, batch, cfg.d_model), cfg.dtype),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    x = params["embed"][tokens].astype(cfg.dtype)        # (B, 1, d)
+
+    def body(h, inp):
+        lp, S, tml, cml = inp
+        hn = _apply_norm(lp["ln_tm"], h, cfg)
+        o, (tm_new, S_new) = _time_mix(lp["tm"], hn, cfg, last=tml,
+                                       state0=S)
+        h = h + o
+        hn = _apply_norm(lp["ln_cm"], h, cfg)
+        o, cm_new = _channel_mix(lp["cm"], hn, cfg, last=cml)
+        return h + o, (S_new, tm_new, cm_new)
+
+    x, (S, tml, cml) = jax.lax.scan(
+        body, x, (params["blocks"], cache["S"], cache["tm_last"],
+                  cache["cm_last"]))
+    x = _apply_norm(params["ln_f"], x, cfg)
+    logits = (x @ params["unembed"])[:, 0]
+    return logits.astype(jnp.float32), {"S": S, "tm_last": tml,
+                                        "cm_last": cml}

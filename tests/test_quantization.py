@@ -1,0 +1,86 @@
+"""Quantization unit + property tests (hypothesis)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import (QuantConfig, abs_max_scale,
+                                     dequantize_int, fake_quant, qmax,
+                                     quantize_int)
+
+_float_arrays = hnp.arrays(
+    np.float32, hnp.array_shapes(min_dims=1, max_dims=3, max_side=16),
+    elements=st.floats(-1e3, 1e3, width=32, allow_nan=False))
+
+
+def test_qmax():
+    assert qmax(8) == 127
+    assert qmax(9) == 255
+    assert qmax(16) == 32767
+
+
+@hypothesis.given(_float_arrays, st.sampled_from([4, 8, 9]))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_fake_quant_error_bound(x, bits):
+    """|fq(x) − x| ≤ scale/2 elementwise (symmetric rounding)."""
+    y = np.asarray(fake_quant(jnp.asarray(x), bits))
+    scale = float(abs_max_scale(jnp.asarray(x), bits))
+    assert np.all(np.abs(y - x) <= scale / 2 + 1e-6)
+
+
+@hypothesis.given(_float_arrays)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_fake_quant_idempotent(x):
+    """Quantizing an already-quantized tensor with the same grid is a
+    no-op (values land exactly on grid points)."""
+    xq = fake_quant(jnp.asarray(x), 8)
+    scale = abs_max_scale(jnp.asarray(x), 8)
+    xqq = fake_quant(xq, 8, scale=scale)
+    np.testing.assert_allclose(np.asarray(xqq), np.asarray(xq), atol=1e-6)
+
+
+@hypothesis.given(_float_arrays)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_int_roundtrip(x):
+    q, s = quantize_int(jnp.asarray(x), 8)
+    assert q.dtype == jnp.int8
+    y = np.asarray(dequantize_int(q, s))
+    scale = float(np.asarray(s).max())
+    assert np.all(np.abs(y - x) <= scale / 2 + 1e-6)
+
+
+def test_nine_bit_int_dtype():
+    x = jnp.linspace(-1, 1, 100)
+    q, s = quantize_int(x, 9)
+    assert q.dtype == jnp.int16
+    assert int(jnp.abs(q).max()) <= 255
+
+
+def test_per_channel_scales():
+    x = jnp.stack([jnp.ones(8) * 100.0, jnp.ones(8) * 0.01])
+    y_tensor = fake_quant(x, 8)
+    y_chan = fake_quant(x, 8, axis=(1,))
+    # per-tensor rounds the small channel to zero; per-channel keeps it
+    assert float(jnp.abs(y_tensor[1]).max()) == 0.0
+    assert float(jnp.abs(y_chan[1] - x[1]).max()) < 1e-4
+
+
+def test_ste_gradient_inside_and_saturated():
+    f = lambda x: jnp.sum(fake_quant(x, 8, scale=jnp.float32(0.01)))
+    g = jax.grad(f)(jnp.array([0.5, 5.0]))   # qmax·scale = 1.27
+    assert g[0] == 1.0      # inside range: identity gradient
+    assert g[1] == 0.0      # saturated: clipped gradient
+
+
+def test_none_bits_noop():
+    x = jnp.array([1.2345])
+    assert fake_quant(x, None) is x
+
+
+def test_quant_config_off():
+    q = QuantConfig.off()
+    assert q.act_bits is None and q.hadamard_bits is None and \
+        q.matrix_bits is None

@@ -1,0 +1,210 @@
+"""Substrate tests: data determinism, optimizer, checkpoint fault
+tolerance, sharding rules, compression math, HLO cost analyzer."""
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (Checkpointer, latest_step, restore,
+                                         save)
+from repro.configs import ARCHS, cells, all_cells, tiny_variant
+from repro.data.pipeline import batch_at, cifar_batch_at, input_specs
+from repro.distributed.compression import compress_leaf, decompress_leaf
+from repro.distributed.sharding import named_sharding, rules
+from repro.optim.optimizer import (adamw_init, adamw_update,
+                                   cosine_schedule, global_norm)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_step_dependent():
+    cfg = tiny_variant(ARCHS["llama3.2-1b"])
+    b1 = batch_at(cfg, 16, 4, step=7)
+    b2 = batch_at(cfg, 16, 4, step=7)
+    b3 = batch_at(cfg, 16, 4, step=8)
+    assert (b1["tokens"] == b2["tokens"]).all()      # resumable
+    assert not (b1["tokens"] == b3["tokens"]).all()  # advances
+    assert (b1["labels"] >= 0).all()
+    assert int(b1["tokens"].max()) < cfg.vocab
+
+
+def test_data_modes_match_specs():
+    for arch in ("hubert-xlarge", "internvl2-26b", "llama3.2-1b"):
+        cfg = tiny_variant(ARCHS[arch])
+        batch = batch_at(cfg, 32, 2, 0)
+        spec = input_specs(cfg, 32, 2, "train")
+        assert set(batch) == set(spec)
+        for k in batch:
+            assert batch[k].shape == spec[k].shape, (arch, k)
+            assert batch[k].dtype == spec[k].dtype, (arch, k)
+
+
+def test_cifar_batch():
+    b = cifar_batch_at(0, 8)
+    assert b["images"].shape == (8, 32, 32, 3)
+    assert int(b["labels"].max()) < 10
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, m = adamw_update(g, opt, params, lr=0.1,
+                                      weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+    assert int(opt["count"]) == 200
+
+
+def test_grad_clip():
+    params = {"w": jnp.ones(4)}
+    opt = adamw_init(params)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = adamw_update(g, opt, params, lr=0.0, grad_clip=1.0)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_bf16_moments():
+    params = {"w": jnp.ones(4)}
+    opt = adamw_init(params, jnp.bfloat16)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(4)}
+    p2, opt2, _ = adamw_update(g, opt, params, lr=0.01)
+    assert opt2["m"]["w"].dtype == jnp.bfloat16
+    assert jnp.isfinite(p2["w"]).all()
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(100)) == pytest.approx(0.1, abs=1e-3)
+    assert float(lr(55)) < float(lr(20))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing (fault tolerance)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": {"c": jnp.float32(3.5), "d": jnp.zeros((4,), jnp.bfloat16)}}
+    save(str(tmp_path), 5, tree)
+    out, step = restore(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"]["d"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        save(str(tmp_path), s, tree, keep=2)
+    assert latest_step(str(tmp_path)) == 4
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    """A crash mid-save (no MANIFEST) must be invisible to restore."""
+    tree = {"x": jnp.zeros(2)}
+    save(str(tmp_path), 1, tree)
+    bad = tmp_path / "step_00000002"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
+    _, step = restore(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_async_checkpointer(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save_async(1, {"x": jnp.ones(3)})
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def test_rules_fsdp_and_duplicate_safety():
+    r = rules(fsdp=True, multi_pod=True)
+    assert r["embed"] == ("pod", "data")
+    assert r["experts"] == "model" and r["expert_mlp"] is None
+
+
+def test_divisibility_fallback():
+    """hubert's 504-vocab head must not shard on a 16-way axis; qwen2-moe's
+    60 experts fall back to sharding the expert hidden dim."""
+    import jax
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # fake a 16-way model axis via rule map's mesh shape injection
+    from repro.distributed.sharding import pspec
+    rm = dict(rules(False, False))
+    rm["__mesh_shape__"] = {"data": 16, "model": 16}
+    # vocab 504 can't take the 16-way axis; the fallback re-places it on
+    # the (divisible) embed dim — still tensor-parallel, never an error.
+    spec = pspec(("embed", "vocab"), rm, shape=(1280, 504))
+    assert spec == jax.sharding.PartitionSpec("model", None)
+    spec = pspec(("experts", "embed", "expert_mlp"), rm,
+                 shape=(60, 2048, 1408))
+    assert spec == jax.sharding.PartitionSpec(None, None, "model")
+
+
+def test_cells_registry():
+    assert len(all_cells()) == 31
+    assert "long_500k" in cells("rwkv6-7b")
+    assert "long_500k" not in cells("qwen1.5-32b")
+    assert cells("hubert-xlarge") == ["train_4k", "prefill_32k"]
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(st.integers(0, 1000))
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_compress_error_feedback_bound(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+    q, s, err = compress_leaf(g)
+    rec = decompress_leaf(q, s) + err
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(g), rtol=1e-5,
+                               atol=1e-5)
+    assert float(jnp.abs(err).max()) <= float(s) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# HLO cost analyzer
+# ---------------------------------------------------------------------------
+
+def test_hlo_cost_loop_scaling():
+    from repro.analysis.hlo_cost import analyze_hlo
+
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=8)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(scanned).lower(x, w).compile()
+    cost = analyze_hlo(compiled.as_text())
+    expected = 8 * 2 * 64 * 128 * 128
+    assert expected <= cost.flops <= expected * 1.05
+    assert not cost.warnings

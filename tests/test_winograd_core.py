@@ -1,0 +1,141 @@
+"""Winograd convolution pipeline: fp exactness vs direct conv, quantized
+behaviour (paper's knobs), flex gradients, 1-D path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import (WinogradSpec, direct_conv1d, direct_conv2d,
+                                 flex_init, make_matrices, winograd_conv1d,
+                                 winograd_conv2d)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rel_err(y, ref):
+    return float(jnp.sqrt(jnp.mean((y - ref) ** 2)) /
+                 jnp.sqrt(jnp.mean(ref ** 2)))
+
+
+@pytest.mark.parametrize("base", ["canonical", "legendre", "chebyshev"])
+@pytest.mark.parametrize("m,r", [(4, 3), (2, 3), (4, 4)])
+def test_fp_matches_direct_2d(base, m, r):
+    x = jax.random.normal(KEY, (2, 13, 17, 5))
+    w = jax.random.normal(jax.random.PRNGKey(1), (r, r, 5, 7)) * 0.3
+    spec = WinogradSpec(m=m, r=r, base=base, quant=QuantConfig.off())
+    y = winograd_conv2d(x, w, spec)
+    ref = direct_conv2d(x, w, "same")
+    assert y.shape == ref.shape
+    assert rel_err(y, ref) < 1e-4
+
+
+@pytest.mark.parametrize("padding", ["same", "valid"])
+def test_padding_modes(padding):
+    x = jax.random.normal(KEY, (1, 16, 16, 3))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 4)) * 0.3
+    spec = WinogradSpec(m=4, r=3, base="legendre", quant=QuantConfig.off())
+    y = winograd_conv2d(x, w, spec, padding=padding)
+    ref = direct_conv2d(x, w, padding)
+    assert y.shape == ref.shape
+    assert rel_err(y, ref) < 1e-4
+
+
+@pytest.mark.parametrize("base", ["canonical", "legendre"])
+@pytest.mark.parametrize("causal", [True, False])
+def test_fp_matches_direct_1d(base, causal):
+    x = jax.random.normal(KEY, (2, 37, 6))
+    w = jax.random.normal(jax.random.PRNGKey(2), (4, 6, 6)) * 0.3
+    spec = WinogradSpec(m=4, r=4, base=base, quant=QuantConfig.off())
+    y = winograd_conv1d(x, w, spec, causal=causal)
+    ref = direct_conv1d(x, w, causal=causal)
+    assert y.shape == ref.shape
+    assert rel_err(y, ref) < 1e-4
+
+
+def test_eq4_equals_eq3_under_stage_boundary_casts():
+    """With fp32 matrices and casts only at stage boundaries, the
+    base-change pipeline (eq. 4) is bit-for-bit the canonical one (eq. 3)
+    up to fp rounding — the algebraic identity of the paper."""
+    x = jax.random.normal(KEY, (2, 16, 16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 8)) * 0.3
+    q = QuantConfig(hadamard_bits=9, matrix_bits=None,
+                    cast_between_stages=False)
+    y_c = winograd_conv2d(x, w, WinogradSpec(m=4, r=3, base="canonical",
+                                             quant=q))
+    y_l = winograd_conv2d(x, w, WinogradSpec(m=4, r=3, base="legendre",
+                                             quant=q))
+    assert rel_err(y_l, y_c) < 2e-2   # same grids; tiny fp re-association
+
+
+def test_hadamard_9bit_beats_8bit():
+    """Paper's headline knob: 9-bit Hadamard reduces error vs 8-bit."""
+    x = jax.random.normal(KEY, (4, 16, 16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 12)) * 0.3
+    ref = direct_conv2d(x, w, "same")
+    errs = {}
+    for hb in (8, 9):
+        spec = WinogradSpec(m=4, r=3, base="legendre",
+                            quant=QuantConfig(hadamard_bits=hb))
+        errs[hb] = rel_err(winograd_conv2d(x, w, spec), ref)
+    assert errs[9] < errs[8]
+
+
+def test_position_scales_beat_per_tensor():
+    """Beyond-paper option: per-Winograd-position scales cut the error."""
+    x = jax.random.normal(KEY, (4, 16, 16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 12)) * 0.3
+    ref = direct_conv2d(x, w, "same")
+    errs = {}
+    for ps in (False, True):
+        spec = WinogradSpec(m=4, r=3, base="legendre",
+                            quant=QuantConfig(hadamard_bits=9,
+                                              position_scales=ps))
+        errs[ps] = rel_err(winograd_conv2d(x, w, spec), ref)
+    assert errs[True] < errs[False] / 2
+
+
+def test_flex_gradients_flow():
+    spec = WinogradSpec(m=4, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9), flex=True)
+    mats = make_matrices(spec)
+    fx = flex_init(spec)
+    x = jax.random.normal(KEY, (2, 8, 8, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 4)) * 0.3
+
+    def loss(fx, w):
+        return jnp.mean(winograd_conv2d(x, w, spec, mats=mats, flex=fx) ** 2)
+
+    gfx, gw = jax.grad(loss, argnums=(0, 1))(fx, w)
+    for k, g in gfx.items():
+        assert jnp.isfinite(g).all() and float(jnp.abs(g).max()) > 0, k
+    assert jnp.isfinite(gw).all() and float(jnp.abs(gw).max()) > 0
+
+
+def test_flex_init_matches_static_forward():
+    """flex initialized at the analytic matrices == static pipeline."""
+    spec_s = WinogradSpec(m=4, r=3, base="legendre",
+                          quant=QuantConfig(hadamard_bits=9))
+    spec_f = WinogradSpec(m=4, r=3, base="legendre",
+                          quant=QuantConfig(hadamard_bits=9), flex=True)
+    mats = make_matrices(spec_s)
+    fx = flex_init(spec_f)
+    x = jax.random.normal(KEY, (2, 8, 8, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 4)) * 0.3
+    y_s = winograd_conv2d(x, w, spec_s, mats=mats)
+    y_f = winograd_conv2d(x, w, spec_f, mats=mats, flex=fx)
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_f), atol=1e-6)
+
+
+def test_amortized_weight_transform():
+    """Passing precomputed U (inference amortization) matches inline."""
+    spec = WinogradSpec(m=4, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9))
+    mats = make_matrices(spec)
+    from repro.core.winograd import transform_weights_2d
+    x = jax.random.normal(KEY, (2, 12, 12, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 6)) * 0.3
+    U = transform_weights_2d(w, spec, mats)
+    y1 = winograd_conv2d(x, w, spec, mats=mats)
+    y2 = winograd_conv2d(x, w, spec, mats=mats, U=U)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
