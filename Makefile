@@ -1,0 +1,18 @@
+# Repo verification entrypoints. `make verify` is the tier-1 gate.
+
+PY ?= python
+
+.PHONY: verify quickstart bench-kernels serve-int8
+
+verify:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+quickstart:
+	PYTHONPATH=src $(PY) examples/quickstart.py
+
+bench-kernels:
+	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench
+
+serve-int8:
+	PYTHONPATH=src $(PY) -m repro.launch.infer_resnet --width 0.25 \
+		--batch 4 --calib-steps 2

@@ -1,12 +1,15 @@
 """Kernel micro-benchmarks (CPU wall-time is indicative only; TPU numbers
 come from the §Roofline model). Compares the Winograd path against direct
-convolution and im2col-GEMM at paper-realistic layer shapes."""
+convolution and im2col-GEMM at paper-realistic layer shapes, plus an
+engine-level sweep over the ConvEngine backends including the
+dynamic-vs-calibrated int8 scaling split."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro.conv import BACKENDS, ConvEngine, ConvPolicy
 from repro.core.quantization import QuantConfig
 from repro.core.winograd import (WinogradSpec, direct_conv2d,
                                  winograd_conv2d)
@@ -66,6 +69,50 @@ def main():
          "interpret-mode (CPU emulation)")
     us = time_fn(jax.jit(kref.wino_gemm_ref), xq, wq)
     emit(f"jnp_wino_gemm_ref_{P}x{M}x{K}x{N}", us, "XLA int32 einsum")
+
+    engine_bench()
+
+
+def engine_bench():
+    """ConvEngine backend sweep + the prepare/execute split.
+
+    The int8 rows isolate what offline packing+calibration buys: the
+    dynamic path re-transforms weights and re-derives per-position scales
+    inside every call; the prepared path runs the
+    extract→transform→GEMM→output hot path only. The deep-stage shape
+    (weight-heavy, small tile grid) is where the offline split pays most;
+    interpret-mode Pallas inflates the shared hot-path cost, so TPU
+    speedups are larger than these CPU numbers.
+    """
+    spec = WinogradSpec(m=4, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9))
+    for (B, H, W, Ci, Co) in [(4, 16, 16, 32, 32), (2, 8, 8, 128, 128)]:
+        tag = f"{B}x{H}x{W}x{Ci}->{Co}"
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, H, W, Ci))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
+
+        for backend in BACKENDS:
+            engine = ConvEngine(spec, ConvPolicy(backend=backend))
+            us = time_fn(lambda a, b, e=engine: e.conv2d(a, b,
+                                                         layer="bench"),
+                         x, w, iters=5)
+            emit(f"engine_{backend}_{tag}", us,
+                 "dynamic scales" if backend == "winograd_int8"
+                 else "stateless")
+            if backend == "winograd_int8":
+                us_dyn = us
+
+        prepared = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+        prepared.prepare([("bench", w, 1)])
+        with prepared.calibration():
+            prepared.conv2d(x, w, layer="bench")
+        us_prep = time_fn(lambda a, e=prepared: e.conv2d(a, None,
+                                                         layer="bench"),
+                          x, iters=5)
+        emit(f"engine_winograd_int8_prepared_{tag}", us_prep,
+             "packed weights + calibrated scales (hot path)")
+        print(f"# {tag}: prepared int8 speedup over dynamic: "
+              f"{us_dyn / max(us_prep, 1e-9):.2f}x")
 
 
 if __name__ == "__main__":

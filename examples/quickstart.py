@@ -1,14 +1,14 @@
-"""Quickstart: the paper's quantized Winograd convolution in 60 lines.
+"""Quickstart: the paper's quantized Winograd convolution through the
+ConvEngine — one dispatch seam, four backends, offline int8 serving.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro.conv import ConvEngine, ConvPolicy
 from repro.core.quantization import QuantConfig
-from repro.core.winograd import (WinogradSpec, direct_conv2d, make_matrices,
-                                 winograd_conv2d)
-from repro.kernels.ops import winograd_conv2d_int8
+from repro.core.winograd import WinogradSpec, direct_conv2d, make_matrices
 
 
 def rel(y, ref):
@@ -24,33 +24,48 @@ def main():
 
     # 1. Exact Toom-Cook F(4×4, 3×3): 2.25 multiplications per output
     #    point instead of 9 — the speedup the paper preserves.
-    spec = WinogradSpec(m=4, r=3, base="legendre", quant=QuantConfig.off())
-    mats = make_matrices(spec)
+    spec = WinogradSpec(m=4, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9))
     print("G_C (Legendre-base kernel transform):")
-    print(jnp.round(mats.GP, 3))
-    y = winograd_conv2d(x, w, spec)
-    print(f"fp32 Winograd vs direct conv: rel err {rel(y, ref):.2e}")
+    print(jnp.round(make_matrices(spec).GP, 3))
+    fp = ConvEngine(spec, ConvPolicy(backend="winograd_fp"))
+    print(f"fp32 Winograd vs direct conv: rel err "
+          f"{rel(fp.conv2d(x, w), ref):.2e}")
 
-    # 2. The paper's quantized pipeline (Fig. 2): symmetric int8 casts
-    #    around every transform, 9-bit Hadamard product stage.
-    for hb in (8, 9):
-        qspec = WinogradSpec(m=4, r=3, base="legendre",
-                             quant=QuantConfig(hadamard_bits=hb))
-        yq = winograd_conv2d(x, w, qspec)
-        print(f"int8 QAT pipeline, {hb}-bit Hadamard: rel err "
-              f"{rel(yq, ref):.4f}")
-
-    # 3. Beyond-paper: per-Winograd-position scales (≈10× error cut).
+    # 2. The paper's quantized QAT pipeline (Fig. 2): symmetric int8
+    #    casts around every transform, 9-bit Hadamard product stage.
+    qat = ConvEngine(spec, ConvPolicy(backend="winograd_fakequant"))
+    print(f"int8 QAT pipeline, 9-bit Hadamard: rel err "
+          f"{rel(qat.conv2d(x, w), ref):.4f}")
     ospec = WinogradSpec(m=4, r=3, base="legendre",
                          quant=QuantConfig(hadamard_bits=9,
                                            position_scales=True))
+    qat_pos = ConvEngine(ospec, ConvPolicy(backend="winograd_fakequant"))
     print(f"  + per-position scales (ours): rel err "
-          f"{rel(winograd_conv2d(x, w, ospec), ref):.4f}")
+          f"{rel(qat_pos.conv2d(x, w), ref):.4f}")
 
-    # 4. True-int8 inference through the Pallas TPU kernels
-    #    (interpret mode on CPU; MXU int8×int8→int32 on TPU).
-    yk = winograd_conv2d_int8(x, w, spec, interpret=True)
-    print(f"Pallas int8 kernel path: rel err {rel(yk, ref):.4f}")
+    # 3. Policy rules: the engine sends out-of-regime convs to direct
+    #    automatically — no per-call-site branching in model code.
+    w1 = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 16, 32))
+    print("1×1 shortcut backend:",
+          qat.backend_for("proj", kernel_size=1, stride=1))
+    print("stride-2 conv backend:",
+          qat.backend_for("down", kernel_size=3, stride=2))
+    assert qat.conv2d(x, w1, layer="proj").shape == (4, 32, 32, 32)
+
+    # 4. True-int8 serving through the Pallas TPU kernels (interpret mode
+    #    on CPU; MXU int8×int8→int32 on TPU): prepare once — per-position
+    #    int8 weights + calibrated scales — then execute the hot path
+    #    with zero weight transforms and zero scale reductions per call.
+    srv = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    y_dynamic = srv.conv2d(x, w, layer="conv1")     # dynamic scales
+    srv.prepare([("conv1", w)])
+    with srv.calibration():
+        srv.conv2d(x, w, layer="conv1")             # observe statistics
+    y_served = srv.conv2d(x, None, layer="conv1")   # packed hot path
+    print(f"Pallas int8 kernel path: rel err {rel(y_served, ref):.4f} "
+          f"(calibrated == dynamic on the calibration batch: "
+          f"{bool(jnp.all(y_served == y_dynamic))})")
 
 
 if __name__ == "__main__":

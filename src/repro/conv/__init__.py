@@ -1,0 +1,19 @@
+"""Unified convolution subsystem: backend dispatch, offline weight
+packing, scale calibration (see ``repro.conv.engine`` for the full
+backend matrix and prepare/execute lifecycle)."""
+from repro.conv.engine import ConvEngine
+from repro.conv.packing import (PackedWinogradWeights, merge_abs_max,
+                                observed_abs_max, pack_weights,
+                                scales_from_abs_max)
+from repro.conv.policy import BACKENDS, ConvPolicy
+
+__all__ = [
+    "BACKENDS",
+    "ConvEngine",
+    "ConvPolicy",
+    "PackedWinogradWeights",
+    "pack_weights",
+    "observed_abs_max",
+    "merge_abs_max",
+    "scales_from_abs_max",
+]

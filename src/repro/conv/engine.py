@@ -1,0 +1,334 @@
+"""ConvEngine: unified dispatch over the paper's convolution family.
+
+Backend matrix
+==============
+
+===================  ========================================  ==========
+backend              implementation                            use
+===================  ========================================  ==========
+``direct``           ``lax.conv_general_dilated``              baseline; strided
+                                                               convs, 1×1
+                                                               shortcuts
+``winograd_fp``      ``core.winograd`` pipeline, quant off     exact F(m, r)
+                                                               reference
+``winograd_fakequant`` ``core.winograd`` pipeline, Fig.-2      QAT training
+                     symmetric casts (8-bit, 8/9-bit           (differentiable,
+                     Hadamard), canonical or changed base      STE gradients)
+``winograd_int8``    Pallas kernels (``kernels.ops``): int8    inference
+                     input transform → MXU int8×int8→int32     serving
+                     GEMM per Winograd position → fused
+                     dequant output transform
+===================  ========================================  ==========
+
+Every convolution in a model goes through ``ConvEngine.conv2d`` with a
+stable ``layer`` name; a ``ConvPolicy`` maps static layer facts (stride,
+kernel size vs the spec's r, channel count, per-layer overrides) to a
+backend, replacing the per-call-site branching that used to live in the
+models. Winograd-aware trained checkpoints therefore deploy onto the int8
+kernels by switching the policy, with no model-code changes.
+
+Prepare/execute lifecycle (int8 serving)
+========================================
+
+1. **prepare** — ``engine.prepare(named_weights)`` transforms each
+   eligible layer's weights once into ``PackedWinogradWeights``
+   (per-position int8 ``u_q`` + weight scales). Offline; the hot path
+   never transforms weights again.
+2. **calibrate** — under ``with engine.calibration():`` run
+   representative batches through the model (eager, not jitted: the
+   engine records concrete per-position abs-maxima in the Winograd input
+   domain and, when the 8/9-bit Hadamard stage is on, of the Hadamard
+   products). On exit the running maxima become per-layer, per-position
+   input and requant scales. Calibrating on a batch reproduces the
+   dynamic scales of that batch bit-for-bit (same compiled reductions).
+3. **serialize** — ``export_state()`` / ``import_state()`` round-trip the
+   packed+calibrated state through ``repro.checkpoint`` (use
+   ``state_template()`` as the restore skeleton).
+4. **execute** — ``conv2d`` on a prepared+calibrated layer dispatches to
+   the hot path: extract → ``input_transform`` → ``wino_gemm`` →
+   ``output_transform``, with zero weight transforms and zero scale
+   reductions (the Hadamard requant scale is calibrated too). Unprepared
+   int8 layers fall back to dynamic scales (correct, one extra fp pass +
+   reductions per call).
+
+Training backends (``winograd_fakequant``/``winograd_fp``/``direct``)
+are stateless and differentiable; ``flex`` transform parameters pass
+straight through to the fake-quant pipeline.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.conv.packing import (PackedWinogradWeights, merge_abs_max,
+                                pack_weights, scales_from_abs_max)
+from repro.conv.policy import BACKENDS, ConvPolicy
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import (WinogradSpec, make_matrices,
+                                 winograd_conv2d)
+from repro.kernels.ops import (_extract, _geometry, _tiles_abs_max,
+                               execute_int8, prepare_weights_int8,
+                               winograd_conv2d_int8)
+
+__all__ = ["ConvEngine"]
+
+
+def _direct(x, w, stride, padding):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+class ConvEngine:
+    """Dispatches convolutions through a policy-selected backend and owns
+    the prepared/calibrated serving state (see module docstring)."""
+
+    def __init__(self, spec: Optional[WinogradSpec],
+                 policy: Optional[ConvPolicy] = None,
+                 padding: str = "same",
+                 hadamard_bits: "Optional[int] | str" = "from_spec",
+                 interpret: bool = True):
+        """``hadamard_bits``: the int8 backend's 8/9-bit Hadamard requant
+        stage. The default mirrors the spec's QAT setting
+        (``spec.quant.hadamard_bits``) so serving matches what the model
+        trained with; pass an int to override or None to disable."""
+        if spec is None:
+            policy = policy or ConvPolicy(backend="direct",
+                                          fallback="direct")
+            routed = ({policy.backend, policy.fallback}
+                      | {b for _, b in policy.overrides})
+            if any(b != "direct" for b in routed):
+                raise ValueError("Winograd backends need a WinogradSpec")
+        if hadamard_bits == "from_spec":
+            hadamard_bits = (spec.quant.hadamard_bits
+                             if spec is not None else None)
+        self.spec = spec
+        self.fp_spec = (dataclasses.replace(spec, quant=QuantConfig.off())
+                        if spec is not None else None)
+        self.policy = policy or ConvPolicy()
+        self.padding = padding
+        self.hadamard_bits = hadamard_bits
+        self.interpret = interpret
+        self.mats = make_matrices(spec) if spec is not None else None
+        self.packed: dict[str, PackedWinogradWeights] = {}
+        self._calibrating = False
+        self._amax: dict[str, jnp.ndarray] = {}     # input-domain running max
+        self._amax_h: dict[str, jnp.ndarray] = {}   # Hadamard-product max
+        self._scales: dict[str, jnp.ndarray] = {}   # finalized calibrations
+        self._h_amax_final: dict[str, jnp.ndarray] = {}
+
+    # -- dispatch -----------------------------------------------------------
+
+    def backend_for(self, layer: str, *, kernel_size: int, stride: int,
+                    in_channels: Optional[int] = None) -> str:
+        r = self.spec.r if self.spec is not None else None
+        return self.policy.backend_for(layer, kernel_size=kernel_size,
+                                       stride=stride, spec_r=r,
+                                       in_channels=in_channels)
+
+    def conv2d(self, x: jnp.ndarray, w: Optional[jnp.ndarray], *,
+               layer: str = "conv", stride: int = 1,
+               flex: Optional[dict] = None,
+               padding: Optional[str] = None) -> jnp.ndarray:
+        """One convolution. x: (N,H,W,Cin) NHWC; w: (k,k,Cin,Cout) HWIO.
+
+        ``w`` may be None for a prepared+calibrated ``winograd_int8``
+        layer (weights live in the packed state). For an int8 layer with
+        packed state, the packed weights are authoritative and a
+        caller-passed ``w`` is ignored — after updating model weights,
+        re-run ``prepare``/``clear_packed`` so serving state tracks them.
+        """
+        pad = padding or self.padding
+        pk = self.packed.get(layer)
+        if w is None:
+            if pk is None:
+                raise ValueError(f"layer {layer!r}: no weights and no "
+                                 "prepared state")
+            k, cin = self.spec.r, pk.u_q.shape[1]
+        else:
+            k, cin = w.shape[0], w.shape[2]
+        backend = self.backend_for(layer, kernel_size=k, stride=stride,
+                                   in_channels=cin)
+        if w is None and backend != "winograd_int8":
+            raise ValueError(
+                f"layer {layer!r}: no weights passed but policy routes to "
+                f"{backend!r} — packed state only serves winograd_int8")
+
+        if backend == "direct":
+            return _direct(x, w, stride, pad)
+        if backend == "winograd_fp":
+            return winograd_conv2d(x, w, self.fp_spec, mats=self.mats,
+                                   flex=flex, padding=pad)
+        if backend == "winograd_fakequant":
+            return winograd_conv2d(x, w, self.spec, mats=self.mats,
+                                   flex=flex, padding=pad)
+        assert backend == "winograd_int8", backend
+        if flex is not None:
+            raise ValueError(
+                "the winograd_int8 backend packs analytic transform "
+                "matrices; flex-trained transforms are not supported — "
+                "serve flex models via winograd_fakequant/winograd_fp")
+        if self._calibrating:
+            return self._calibrate_conv(x, w, pk, layer, pad)
+        if pk is not None:
+            # Packed weights win over any caller-passed ``w`` (the
+            # serving contract — see the docstring); dynamic scales when
+            # uncalibrated, e.g. recalibrating a restored engine.
+            return winograd_conv2d_int8(
+                x, None, self.spec, pad,
+                in_scales=pk.in_scales if pk.calibrated else None,
+                u_q=pk.u_q, w_scales=pk.w_scales,
+                hadamard_bits=self.hadamard_bits,
+                h_amax=pk.hadamard_amax if pk.calibrated else None,
+                interpret=self.interpret)
+        return winograd_conv2d_int8(
+            x, w, self.spec, pad, hadamard_bits=self.hadamard_bits,
+            interpret=self.interpret)
+
+    def _calibrate_conv(self, x, w, pk, layer, pad):
+        """One int8 conv under calibration: extract tiles once, record
+        input-domain and Hadamard-product maxima, execute with this
+        batch's statistics (bit-identical to the dynamic derivation)."""
+        if pk is not None:
+            u_q, w_scales = pk.u_q, pk.w_scales
+        else:
+            u_q, w_scales = prepare_weights_int8(w, self.spec)
+        tiles = _extract(x, self.spec.m, self.spec.r, self.spec.n, pad)
+        geom = _geometry(x.shape, self.spec.m, self.spec.r, pad)
+        amax = _tiles_abs_max(tiles, self.spec)
+        self._amax[layer] = merge_abs_max(self._amax.get(layer), amax)
+        scales = scales_from_abs_max(amax)
+        if self.hadamard_bits is None:
+            return execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
+                                geom=geom, hadamard_bits=None,
+                                interpret=self.interpret)
+        y, amax_h = execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
+                                 geom=geom, hadamard_bits=self.hadamard_bits,
+                                 interpret=self.interpret, with_stats=True)
+        self._amax_h[layer] = merge_abs_max(self._amax_h.get(layer), amax_h)
+        return y
+
+    # -- prepare / calibrate ------------------------------------------------
+
+    def prepare_layer(self, layer: str, w: jnp.ndarray, *,
+                      stride: int = 1) -> bool:
+        """Pack one layer's weights if the policy routes it to int8.
+
+        Returns True when the layer was packed (already-calibrated scales
+        for the layer are preserved across a re-pack).
+        """
+        backend = self.backend_for(layer, kernel_size=w.shape[0],
+                                   stride=stride, in_channels=w.shape[2])
+        if backend != "winograd_int8":
+            return False
+        old = self.packed.get(layer)
+        new = pack_weights(w, self.spec)
+        if old is not None and old.calibrated:
+            # in_scales depend only on the input distribution and survive
+            # a re-pack; the Hadamard abs-max depends on the weights, so
+            # it is dropped (dynamic requant until recalibrated).
+            new = dataclasses.replace(new, in_scales=old.in_scales)
+        elif layer in self._scales:      # calibrated just before packing
+            new = dataclasses.replace(
+                new, in_scales=self._scales[layer],
+                hadamard_amax=self._h_amax_final.get(layer))
+        self.packed[layer] = new
+        return True
+
+    def prepare(self, named_weights: Iterable[tuple]) -> list[str]:
+        """Pack every int8-routed layer. Items: (layer, w[, stride])."""
+        packed = []
+        for item in named_weights:
+            layer, w, stride = item if len(item) == 3 else (*item, 1)
+            if self.prepare_layer(layer, w, stride=stride):
+                packed.append(layer)
+        return packed
+
+    def clear_packed(self, calibrations: bool = False):
+        """Drop packed weights (stale after a weight update); keep the
+        calibrated scales unless ``calibrations`` is also set."""
+        self.packed = {}
+        if calibrations:
+            self._scales = {}
+            self._h_amax_final = {}
+
+    @contextlib.contextmanager
+    def calibration(self):
+        """Record per-layer input statistics; finalize scales on exit.
+
+        Run forwards eagerly inside the block (the engine folds concrete
+        abs-maxima into running state, which a jit trace cannot do).
+        """
+        self.begin_calibration()
+        try:
+            yield self
+        finally:
+            self.end_calibration()
+
+    def begin_calibration(self):
+        self._calibrating = True
+        self._amax = {}
+        self._amax_h = {}
+
+    def end_calibration(self) -> dict[str, jnp.ndarray]:
+        """Finalize: running abs-maxima → per-layer in_scales (and
+        Hadamard requant scales when that stage is on).
+
+        Scales are kept for layers not packed yet, so
+        calibrate-then-prepare orderings work too.
+        """
+        self._calibrating = False
+        scales = {}
+        for layer, amax in self._amax.items():
+            s = scales_from_abs_max(amax)
+            scales[layer] = s
+            self._scales[layer] = s
+            hs = None
+            if layer in self._amax_h:
+                # Stored as the raw abs-max: execute_int8 applies the
+                # same in-graph scale formula as the dynamic requant,
+                # keeping the two paths bit-identical.
+                hs = self._amax_h[layer].reshape(-1, 1)
+                self._h_amax_final[layer] = hs
+            if layer in self.packed:
+                self.packed[layer] = dataclasses.replace(
+                    self.packed[layer], in_scales=s, hadamard_amax=hs)
+        self._amax = {}
+        self._amax_h = {}
+        return scales
+
+    # -- serialization ------------------------------------------------------
+
+    def export_state(self) -> dict:
+        """Packed+calibrated state as a checkpointable pytree."""
+        missing = [l for l, p in self.packed.items()
+                   if not p.calibrated
+                   or (self.hadamard_bits is not None
+                       and p.hadamard_amax is None)]
+        if missing:
+            raise ValueError("layers not calibrated (or with stale "
+                             f"Hadamard statistics): {sorted(missing)}")
+        return {"packed": {l: p.to_tree() for l, p in self.packed.items()}}
+
+    def state_template(self) -> dict:
+        """Zero-filled tree matching ``export_state`` — the restore
+        skeleton for ``repro.checkpoint.restore`` after ``prepare()``."""
+        def tmpl(p: PackedWinogradWeights) -> dict:
+            P = p.u_q.shape[0]
+            zeros = jnp.zeros((P, 1), jnp.float32)
+            t = {"u_q": p.u_q, "w_scales": p.w_scales,
+                 "in_scales": p.in_scales if p.calibrated else zeros}
+            if self.hadamard_bits is not None:
+                t["hadamard_amax"] = (p.hadamard_amax
+                                        if p.hadamard_amax is not None
+                                        else zeros)
+            return t
+        return {"packed": {l: tmpl(p) for l, p in self.packed.items()}}
+
+    def import_state(self, tree: dict):
+        self.packed = {l: PackedWinogradWeights.from_tree(sub)
+                       for l, sub in tree["packed"].items()}

@@ -1,0 +1,114 @@
+"""Offline weight packing and input-scale calibration for int8 serving.
+
+The LANCE-style offline/online split: everything that does not depend on
+the live request batch — the Winograd weight transform, its per-position
+int8 quantization, and the per-position input quantization scales — is
+computed once here, so the jitted hot path (``kernels.ops``) runs zero
+weight transforms and zero scale reductions per call.
+
+* ``pack_weights``: fp HWIO weights → ``PackedWinogradWeights`` (the
+  per-position int8 ``u_q`` tensor laid out for ``wino_gemm`` + weight
+  scales).
+* ``observed_abs_max`` / ``merge_abs_max`` / ``scales_from_abs_max``:
+  streaming calibration. Run representative batches through
+  ``observed_abs_max`` (the same compiled transform-domain reduction the
+  dynamic path uses — ``kernels.ops.input_abs_max`` — so calibrating on a
+  batch reproduces the dynamic scales for that batch bit-for-bit), fold
+  the running maxima with ``merge_abs_max``, and finalize with
+  ``scales_from_abs_max``.
+
+``PackedWinogradWeights`` is a registered pytree, so packed models ride
+through ``repro.checkpoint`` (and jit boundaries) unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.winograd import WinogradSpec
+from repro.kernels.ops import (input_abs_max, prepare_weights_int8,
+                               scales_from_abs_max)
+
+__all__ = [
+    "PackedWinogradWeights",
+    "pack_weights",
+    "observed_abs_max",
+    "merge_abs_max",
+    "scales_from_abs_max",
+]
+
+
+@dataclasses.dataclass
+class PackedWinogradWeights:
+    """Prepared per-layer serving state for the int8 Winograd backend.
+
+    ``u_q``: (P, Cin, Cout) int8 — Winograd-domain weights, position-major
+    for ``wino_gemm``. ``w_scales``: (P, 1) fp32. ``in_scales``: (P, 1)
+    fp32 calibrated input scales, None until calibration finishes.
+    ``hadamard_amax``: (P, 1) fp32 calibrated abs-maxima of the Hadamard
+    products — the requant statistic for the 8/9-bit Hadamard stage
+    (only when that stage is enabled; the scale formula itself stays in
+    the execute graph so calibrated == dynamic bit-for-bit).
+    """
+
+    u_q: jnp.ndarray
+    w_scales: jnp.ndarray
+    in_scales: Optional[jnp.ndarray] = None
+    hadamard_amax: Optional[jnp.ndarray] = None
+
+    @property
+    def calibrated(self) -> bool:
+        return self.in_scales is not None
+
+    def to_tree(self) -> dict:
+        """Plain-dict form for checkpointing (requires calibration)."""
+        if not self.calibrated:
+            raise ValueError("uncalibrated PackedWinogradWeights cannot be "
+                             "serialized; run calibration first")
+        tree = {"u_q": self.u_q, "w_scales": self.w_scales,
+                "in_scales": self.in_scales}
+        if self.hadamard_amax is not None:
+            tree["hadamard_amax"] = self.hadamard_amax
+        return tree
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "PackedWinogradWeights":
+        hs = tree.get("hadamard_amax")
+        return cls(u_q=jnp.asarray(tree["u_q"]),
+                   w_scales=jnp.asarray(tree["w_scales"]),
+                   in_scales=jnp.asarray(tree["in_scales"]),
+                   hadamard_amax=None if hs is None else jnp.asarray(hs))
+
+
+jax.tree_util.register_pytree_node(
+    PackedWinogradWeights,
+    lambda p: ((p.u_q, p.w_scales, p.in_scales, p.hadamard_amax), None),
+    lambda _, c: PackedWinogradWeights(*c),
+)
+
+
+def pack_weights(w: jnp.ndarray, spec: WinogradSpec
+                 ) -> PackedWinogradWeights:
+    """Transform + quantize (r,r,Cin,Cout) weights once, offline."""
+    u_q, w_scales = prepare_weights_int8(w, spec)
+    return PackedWinogradWeights(u_q=u_q, w_scales=w_scales)
+
+
+def observed_abs_max(x: jnp.ndarray, spec: WinogradSpec,
+                     padding: str = "same") -> jnp.ndarray:
+    """Per-position abs-max of one batch in the Winograd input domain.
+
+    x: (N, H, W, Cin) NHWC → (n²,) fp32. The same compiled reduction the
+    dynamic path uses (``kernels.ops.input_abs_max``), so same-batch
+    calibration is bit-identical to dynamic scaling.
+    """
+    return input_abs_max(x, spec, padding)
+
+
+def merge_abs_max(running: Optional[jnp.ndarray],
+                  new: jnp.ndarray) -> jnp.ndarray:
+    """Fold one batch's abs-max into the running calibration maxima."""
+    return new if running is None else jnp.maximum(running, new)

@@ -1,0 +1,65 @@
+"""Per-layer convolution backend selection.
+
+The rules that used to live as ad-hoc branches at the call sites
+(``stride == 1 and cfg.use_winograd and ...``) are centralized here: a
+``ConvPolicy`` names the backend for Winograd-eligible layers, the
+fallback for everything outside the Winograd regime (strided convs, 1×1
+shortcuts, kernel sizes the spec's F(m, r) does not cover), and optional
+per-layer overrides for mixed-precision deployments.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["BACKENDS", "ConvPolicy"]
+
+#: The engine's backend matrix (see repro.conv.engine for semantics).
+BACKENDS = ("direct", "winograd_fp", "winograd_fakequant", "winograd_int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPolicy:
+    """Chooses a backend per layer from static layer facts.
+
+    ``backend`` applies to Winograd-eligible convolutions (stride 1,
+    kernel size == spec.r, at least ``min_channels`` input channels);
+    ``fallback`` to everything else. ``overrides`` (a tuple of
+    ``(layer_name, backend)`` pairs — tuple, so the policy stays hashable
+    for jit static args) wins over both.
+    """
+
+    backend: str = "winograd_fakequant"
+    fallback: str = "direct"
+    min_channels: int = 0
+    overrides: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        for b in (self.backend, self.fallback):
+            if b not in BACKENDS:
+                raise ValueError(f"unknown backend {b!r}; one of {BACKENDS}")
+        for name, b in self.overrides:
+            if b not in BACKENDS:
+                raise ValueError(f"override {name!r}: unknown backend {b!r}")
+
+    def backend_for(self, layer: str, *, kernel_size: int, stride: int,
+                    spec_r: int | None, in_channels: int | None = None
+                    ) -> str:
+        """Resolve the backend for one convolution layer.
+
+        Overrides win, but cannot force a Winograd backend onto a layer
+        outside the Winograd regime (the pipeline has no stride/kernel
+        generality — silently dispatching would compute the wrong conv).
+        """
+        regime_ok = (stride == 1 and spec_r is not None
+                     and kernel_size == spec_r)
+        for name, b in self.overrides:
+            if name == layer:
+                if b != "direct" and not regime_ok:
+                    raise ValueError(
+                        f"override {layer!r} → {b!r}: layer is outside the "
+                        f"Winograd regime (kernel {kernel_size}, stride "
+                        f"{stride}, spec r={spec_r})")
+                return b
+        eligible = regime_ok and (in_channels is None
+                                  or in_channels >= self.min_channels)
+        return self.backend if eligible else self.fallback

@@ -12,6 +12,14 @@ Pipeline (NHWC):
 Scales: per-Winograd-position symmetric scales. Production serving uses
 *calibrated* scales passed by the caller; when omitted they are derived
 dynamically (an extra XLA reduction — fine for tests/benchmarks).
+
+Prepare/execute split (the LANCE-style offline/online cut): call
+``prepare_weights_int8`` once per model to get the per-position int8
+weight tensor + scales, calibrate the input scales — and, when the
+8/9-bit Hadamard stage is on, the requant scales — offline (see
+``repro.conv.packing``), then pass them into ``winograd_conv2d_int8`` —
+the jitted hot path then performs **zero** weight transforms and **zero**
+scale reductions per call. ``repro.conv.ConvEngine`` wraps this lifecycle.
 """
 from __future__ import annotations
 
@@ -21,28 +29,38 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import qmax
+from repro.core.quantization import QuantConfig, qmax
 from repro.core.winograd import (WinogradMatrices, WinogradSpec,
                                  _extract_tiles_1d_axis, _pad_amounts,
-                                 make_matrices)
+                                 make_matrices, transform_weights_2d)
 from repro.kernels import ref as kref
 from repro.kernels.q8_matmul import q8_matmul
 from repro.kernels.wino_gemm import wino_gemm
 from repro.kernels.wino_transform import input_transform, output_transform
 
-__all__ = ["winograd_conv2d_int8", "q8_linear"]
+__all__ = ["prepare_weights_int8", "input_abs_max", "scales_from_abs_max",
+           "winograd_conv2d_int8", "execute_int8", "q8_linear"]
 
 
+def _geometry(x_shape, m: int, r: int, padding: str):
+    N, H, W, _ = x_shape
+    _, _, nt_h, Ho = _pad_amounts(H, m, r, padding)
+    _, _, nt_w, Wo = _pad_amounts(W, m, r, padding)
+    return (N, nt_h, nt_w, Ho, Wo)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r", "n", "padding"))
 def _extract(x: jnp.ndarray, m: int, r: int, n: int, padding: str):
+    """(N,H,W,C) → (T, C, n, n) overlapping tiles, one fused call."""
     N, H, W, C = x.shape
-    lo_h, hi_h, nt_h, Ho = _pad_amounts(H, m, r, padding)
-    lo_w, hi_w, nt_w, Wo = _pad_amounts(W, m, r, padding)
+    lo_h, hi_h, nt_h, _ = _pad_amounts(H, m, r, padding)
+    lo_w, hi_w, nt_w, _ = _pad_amounts(W, m, r, padding)
     xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
     t = _extract_tiles_1d_axis(xp, xp.shape[1], m, n, nt_h, axis=1)
     t = _extract_tiles_1d_axis(t, t.shape[3], m, n, nt_w, axis=3)
     t = jnp.transpose(t, (0, 1, 3, 5, 2, 4))        # (N,th,tw,C,n,n)
     T = N * nt_h * nt_w
-    return t.reshape(T, C, n, n), (N, nt_h, nt_w, Ho, Wo)
+    return t.reshape(T, C, n, n)
 
 
 def _reassemble(y: jnp.ndarray, geom, m: int) -> jnp.ndarray:
@@ -53,64 +71,158 @@ def _reassemble(y: jnp.ndarray, geom, m: int) -> jnp.ndarray:
     return y[:, :Ho, :Wo, :]
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "padding", "interpret",
-                                             "hadamard_bits"))
-def winograd_conv2d_int8(x: jnp.ndarray, w: jnp.ndarray, spec: WinogradSpec,
-                         padding: str = "same",
-                         in_scales: Optional[jnp.ndarray] = None,
-                         hadamard_bits: Optional[int] = None,
-                         interpret: bool = True) -> jnp.ndarray:
-    """True-int8 Winograd conv via the Pallas kernels.
+@functools.partial(jax.jit, static_argnames=("spec",))
+def prepare_weights_int8(w: jnp.ndarray, spec: WinogradSpec
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Offline weight packing: (r,r,Cin,Cout) fp → per-position int8.
 
-    ``interpret=True`` (default here) runs the kernel bodies on CPU; on a
-    real TPU deployment pass ``interpret=False``.
+    Exact fp Winograd transform (tiny — once per model), then symmetric
+    per-position int8 quantization. Returns ``(u_q, w_scales)`` with
+    ``u_q`` (P, Cin, Cout) int8 laid out for ``wino_gemm`` and
+    ``w_scales`` (P, 1) fp32.
+
+    Jitted on its own so the dynamic fallback of ``winograd_conv2d_int8``
+    and offline packing compile identically — a prepared execution is
+    bit-for-bit the dynamic one.
     """
     mats = make_matrices(spec)
     m, r, n = spec.m, spec.r, spec.n
     P = n * n
-    tiles, geom = _extract(x, m, r, n, padding)      # (T, Cin, n, n)
-
-    # Weight path: exact fp transform (tiny, offline in production), then
-    # per-position int8 quantization.
-    from repro.core.quantization import QuantConfig
     fp_spec = WinogradSpec(m=m, r=r, base=spec.base, quant=QuantConfig.off())
-    from repro.core.winograd import transform_weights_2d
     U = transform_weights_2d(w, fp_spec, mats)       # (Cin, Cout, n, n) fp
-    Uq_src = jnp.moveaxis(U.reshape(*U.shape[:2], P), -1, 0)  # (P,Cin,Cout)
-    s_w = jnp.max(jnp.abs(Uq_src), axis=(1, 2), keepdims=True) / 127.0
+    u_src = jnp.moveaxis(U.reshape(*U.shape[:2], P), -1, 0)   # (P,Cin,Cout)
+    s_w = jnp.max(jnp.abs(u_src), axis=(1, 2), keepdims=True) / 127.0
     s_w = jnp.maximum(s_w, 1e-12)
-    Uq = jnp.clip(jnp.round(Uq_src / s_w), -127, 127).astype(jnp.int8)
+    u_q = jnp.clip(jnp.round(u_src / s_w), -127, 127).astype(jnp.int8)
+    return u_q, s_w.reshape(P, 1)
 
-    # Input path: per-position scales (dynamic unless calibrated).
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _tiles_abs_max(tiles: jnp.ndarray, spec: WinogradSpec) -> jnp.ndarray:
+    """Per-position abs-max of extracted (T,Cin,n,n) tiles in the
+    Winograd input domain → (n²,) fp32.
+
+    The dynamic-scale fallback and offline calibration both call exactly
+    this compiled function (tile extraction is exact data movement), so
+    calibrating on a batch reproduces that batch's dynamic scales
+    bit-for-bit.
+    """
+    mats = make_matrices(spec)
+    v_fp = kref.input_transform_fp(tiles, mats.CinvT, mats.BPT,
+                                   spec.changes_base)
+    return jnp.max(jnp.abs(v_fp), axis=(1, 2))
+
+
+def input_abs_max(x: jnp.ndarray, spec: WinogradSpec,
+                  padding: str = "same") -> jnp.ndarray:
+    """Per-position abs-max of (N,H,W,Cin) in the Winograd input domain.
+
+    One fp pass through the input transform + a reduction → (n²,) fp32.
+    The calibration entry point; the dynamic fallback of
+    ``winograd_conv2d_int8`` shares ``_tiles_abs_max`` underneath.
+    """
+    tiles = _extract(x, spec.m, spec.r, spec.n, padding)
+    return _tiles_abs_max(tiles, spec)
+
+
+def scales_from_abs_max(amax: jnp.ndarray) -> jnp.ndarray:
+    """(n²,) abs-max → (n², 1) symmetric int8 scales."""
+    return jnp.maximum(amax, 1e-12).reshape(-1, 1) / 127.0
+
+
+def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
+                         spec: WinogradSpec,
+                         padding: str = "same",
+                         in_scales: Optional[jnp.ndarray] = None,
+                         u_q: Optional[jnp.ndarray] = None,
+                         w_scales: Optional[jnp.ndarray] = None,
+                         hadamard_bits: Optional[int] = None,
+                         h_amax: Optional[jnp.ndarray] = None,
+                         interpret: bool = True) -> jnp.ndarray:
+    """True-int8 Winograd conv via the Pallas kernels.
+
+    Two modes, chosen per argument:
+
+    * **dynamic** (tests/benchmarks): pass raw HWIO weights ``w``; the
+      weight transform + quantization (``prepare_weights_int8``) and the
+      input-scale reduction (``input_abs_max``) run per call.
+    * **prepared** (serving): pass ``u_q``/``w_scales`` from
+      ``prepare_weights_int8`` and calibrated ``in_scales``; only the
+      jitted hot path runs — extract → input_transform → wino_gemm →
+      output_transform, with zero weight transforms and zero scale
+      reductions.
+
+    Both modes funnel into the same compiled execute function, so a
+    prepared call whose calibration saw this batch matches the dynamic
+    call bit-for-bit.
+
+    ``interpret=True`` (default here) runs the kernel bodies on CPU; on a
+    real TPU deployment pass ``interpret=False``.
+    """
+    if u_q is None:
+        if w is None:
+            raise ValueError("pass either raw weights w or prepared "
+                             "(u_q, w_scales)")
+        u_q, w_scales = prepare_weights_int8(w, spec)
+    elif w_scales is None:
+        raise ValueError("prepared u_q requires w_scales")
+    tiles = _extract(x, spec.m, spec.r, spec.n, padding)        # once
+    geom = _geometry(x.shape, spec.m, spec.r, padding)
     if in_scales is None:
-        v_fp = kref.input_transform_ref(tiles, mats.CinvT, mats.BPT,
-                                        jnp.ones((P, 1)), spec.changes_base)
-        # ref with unit scale returns clipped ints; recompute fp for range:
-        v_fp = kref._sandwich(mats.BPT, kref._sandwich(mats.CinvT, tiles)
-                              if spec.changes_base else tiles)
-        v_fp = jnp.moveaxis(v_fp.reshape(tiles.shape[0], tiles.shape[1], P),
-                            -1, 0)
-        in_scales = jnp.max(jnp.abs(v_fp), axis=(1, 2), keepdims=False)
-        in_scales = jnp.maximum(in_scales, 1e-12).reshape(P, 1) / 127.0
+        in_scales = scales_from_abs_max(_tiles_abs_max(tiles, spec))
+    return execute_int8(tiles, u_q, w_scales, in_scales, h_amax,
+                        spec=spec, geom=geom, hadamard_bits=hadamard_bits,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "geom", "interpret",
+                                             "hadamard_bits", "with_stats"))
+def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
+                 w_scales: jnp.ndarray, in_scales: jnp.ndarray,
+                 h_amax: Optional[jnp.ndarray] = None, *,
+                 spec: WinogradSpec, geom: tuple,
+                 hadamard_bits: Optional[int],
+                 interpret: bool, with_stats: bool = False):
+    """The serving hot path: consumes extracted tiles, prepared weights
+    and static scales.
+
+    With calibrated ``h_amax`` — the (n²,) per-position abs-max of the
+    Hadamard products, recorded offline — the requant stage does no
+    reduction either: the fully-prepared path is reduction-free. The
+    statistic rides as a raw abs-max (not a final scale) so the
+    scale formula stays inside this graph in both modes, keeping
+    calibrated and dynamic executions bit-identical on the calibration
+    batch. ``with_stats=True`` (calibration) additionally returns that
+    abs-max.
+    """
+    assert not (with_stats and hadamard_bits is None)
+    mats = make_matrices(spec)
+    m = spec.m
 
     Xq = input_transform(tiles, mats.CinvT, mats.BPT, in_scales,
                          changes_base=spec.changes_base, interpret=interpret)
-    H = wino_gemm(Xq, Uq, interpret=interpret)       # (P, T, Cout) int32
+    H = wino_gemm(Xq, u_q, interpret=interpret)      # (P, T, Cout) int32
 
-    deq = in_scales * s_w.reshape(P, 1)              # (P, 1)
+    deq = in_scales * w_scales                       # (P, 1)
+    amax_h = None
     if hadamard_bits is not None:
         # The paper's 8/9-bit Hadamard stage: requantize the int32 products
         # onto a 2^b-level grid (per position) before the output transform.
         hf = H.astype(jnp.float32) * deq[:, :, None]
-        s_h = jnp.max(jnp.abs(hf), axis=(1, 2), keepdims=True)
-        s_h = jnp.maximum(s_h, 1e-12) / qmax(hadamard_bits)
+        if h_amax is None or with_stats:
+            amax_h = jnp.max(jnp.abs(hf), axis=(1, 2), keepdims=True)
+        amax = amax_h if h_amax is None else h_amax.reshape(-1, 1, 1)
+        s_h = jnp.maximum(amax, 1e-12) / qmax(hadamard_bits)
         H = jnp.clip(jnp.round(hf / s_h), -qmax(hadamard_bits),
                      qmax(hadamard_bits)).astype(jnp.int32)
         deq = s_h[:, :, 0]
 
     y = output_transform(H, deq, mats.CinvT, mats.APT, m=m,
                          changes_base=spec.changes_base, interpret=interpret)
-    return _reassemble(y, geom, m)
+    out = _reassemble(y, geom, m)
+    if with_stats:
+        return out, amax_h[:, 0, 0]
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "wino_gemm_ref",
+    "input_transform_fp",
     "input_transform_ref",
     "output_transform_ref",
     "q8_matmul_ref",
@@ -28,16 +29,28 @@ def _sandwich(M, X, N=None):
     return jnp.einsum("ij,...jk,lk->...il", M, X, N)
 
 
-def input_transform_ref(tiles: jnp.ndarray, cinvt: jnp.ndarray,
-                        bpt: jnp.ndarray, pos_scale: jnp.ndarray,
-                        changes_base: bool = True) -> jnp.ndarray:
-    """tiles (T,C,n,n) fp32 → (n²,T,C) int8 (matches kernels.input_transform)."""
+def input_transform_fp(tiles: jnp.ndarray, cinvt: jnp.ndarray,
+                       bpt: jnp.ndarray,
+                       changes_base: bool = True) -> jnp.ndarray:
+    """tiles (T,C,n,n) fp32 → Winograd-domain (n²,T,C) fp32, no quantization.
+
+    The pre-quantization values of ``input_transform``; dynamic-scale
+    derivation and offline calibration both reduce over this tensor, so
+    sharing it keeps the two paths bit-identical.
+    """
     T, C, n, _ = tiles.shape
     x = tiles.astype(jnp.float32)
     if changes_base:
         x = _sandwich(cinvt, x)
     v = _sandwich(bpt, x)                                   # (T, C, n, n)
-    v = jnp.moveaxis(v.reshape(T, C, n * n), -1, 0)          # (n², T, C)
+    return jnp.moveaxis(v.reshape(T, C, n * n), -1, 0)       # (n², T, C)
+
+
+def input_transform_ref(tiles: jnp.ndarray, cinvt: jnp.ndarray,
+                        bpt: jnp.ndarray, pos_scale: jnp.ndarray,
+                        changes_base: bool = True) -> jnp.ndarray:
+    """tiles (T,C,n,n) fp32 → (n²,T,C) int8 (matches kernels.input_transform)."""
+    v = input_transform_fp(tiles, cinvt, bpt, changes_base)
     q = jnp.clip(jnp.round(v / pos_scale[:, :, None]), -127, 127)
     return q.astype(jnp.int8)
 

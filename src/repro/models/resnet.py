@@ -1,11 +1,14 @@
 """ResNet18-CIFAR10 with Winograd-aware quantized convolutions — the
 paper's own experimental model (channel multiplier 0.25 / 0.5 / 1.0).
 
-Every stride-1 3×3 convolution runs through the paper's pipeline
-(``repro.core.winograd.winograd_conv2d``, F(4×4,3×3), canonical or
-Legendre base, static or flex, 8/9-bit Hadamard). Stride-2 convolutions
-and 1×1 shortcuts use direct convolution (outside the Winograd regime),
-exactly as in [5]'s reference code.
+Every convolution routes through ``repro.conv.ConvEngine``: the policy
+sends stride-1 3×3 convs to the configured Winograd backend (fake-quant
+QAT for training, true-int8 Pallas kernels for serving) and stride-2
+convs / 1×1 shortcuts to direct convolution (outside the Winograd
+regime), exactly the split in [5]'s reference code. ``make_engine``
+builds the engine from a config; ``conv_layers`` enumerates the model's
+convolutions for the engine's offline prepare/calibrate lifecycle (see
+``repro.launch.infer_resnet`` for the full int8 serving flow).
 
 BatchNorm keeps running statistics in a separate ``state`` pytree
 (functional: train_step returns the updated state).
@@ -18,13 +21,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.conv import ConvEngine, ConvPolicy
 from repro.core.quantization import QuantConfig
-from repro.core.winograd import (WinogradSpec, direct_conv2d, flex_init,
-                                 make_matrices, winograd_conv2d)
+from repro.core.winograd import WinogradSpec, flex_init
 from repro.models.param import ParamSpec
 
 __all__ = ["ResNetConfig", "param_specs", "state_specs", "forward",
-           "loss_fn", "NUM_CLASSES"]
+           "loss_fn", "make_engine", "conv_layers", "NUM_CLASSES"]
 
 NUM_CLASSES = 10
 _STAGES = (2, 2, 2, 2)          # ResNet18 basic blocks per stage
@@ -39,6 +42,8 @@ class ResNetConfig:
     wino: Optional[WinogradSpec] = WinogradSpec(
         m=4, r=3, base="legendre", quant=QuantConfig())
     use_winograd: bool = True    # False → direct conv everywhere (baseline)
+    conv_backend: Optional[str] = None   # engine backend for eligible convs
+    # (None → "winograd_fakequant" when use_winograd else "direct")
     flex: bool = False           # learnable transform matrices
     num_classes: int = NUM_CLASSES
     param_dtype: str = "float32"
@@ -143,23 +148,48 @@ def _bn(x, p, st, training: bool, momentum: float):
     return y * p["scale"] + p["bias"], new
 
 
-def _conv3x3(x, w, cfg, stride, mats, flex):
-    if stride == 1 and cfg.use_winograd and cfg.wino is not None:
-        return winograd_conv2d(x, w, cfg.wino, mats=mats, flex=flex,
-                               padding="same")
-    return jax.lax.conv_general_dilated(
-        x, w, (stride, stride), "SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
+                interpret: bool = True) -> ConvEngine:
+    """Build the config's ConvEngine.
+
+    ``backend`` overrides the eligible-conv backend (e.g.
+    ``"winograd_int8"`` to serve a trained checkpoint through the Pallas
+    kernels without touching model code).
+    """
+    if not cfg.use_winograd or cfg.wino is None:
+        return ConvEngine(cfg.wino,
+                          ConvPolicy(backend="direct", fallback="direct"))
+    backend = backend or cfg.conv_backend or "winograd_fakequant"
+    return ConvEngine(cfg.wino, ConvPolicy(backend=backend),
+                      interpret=interpret)
 
 
-def forward(params, state, images, cfg: ResNetConfig, training: bool = False):
-    """images: (B, 32, 32, 3) → logits (B, classes), new_state."""
-    mats = make_matrices(cfg.wino) if cfg.wino is not None else None
+def conv_layers(params, cfg: ResNetConfig):
+    """Yield (layer_name, weights, stride) for every engine-routed conv —
+    the iteration order of ``forward``, for prepare()/calibration."""
+    yield "stem", params["stem"], 1
+    for nm, _, _, stride in _iter_blocks(cfg):
+        p = params["blocks"][nm]
+        yield f"{nm}.conv1", p["conv1"], stride
+        yield f"{nm}.conv2", p["conv2"], 1
+        if "proj" in p:
+            yield f"{nm}.proj", p["proj"], stride
+
+
+def forward(params, state, images, cfg: ResNetConfig, training: bool = False,
+            engine: Optional[ConvEngine] = None):
+    """images: (B, 32, 32, 3) → logits (B, classes), new_state.
+
+    ``engine`` carries prepared/calibrated serving state; omitted, a
+    stateless engine is built from the config (training path).
+    """
+    if engine is None:
+        engine = make_engine(cfg)
     flex = params.get("wino_flex")
     mom = cfg.bn_momentum
     new_state = {"blocks": {}}
 
-    x = _conv3x3(images, params["stem"], cfg, 1, mats, flex)
+    x = engine.conv2d(images, params["stem"], layer="stem", flex=flex)
     x, new_state["bn_stem"] = _bn(x, params["bn_stem"], state["bn_stem"],
                                   training, mom)
     x = jax.nn.relu(x)
@@ -167,15 +197,15 @@ def forward(params, state, images, cfg: ResNetConfig, training: bool = False):
     for nm, cin, cout, stride in _iter_blocks(cfg):
         p, st = params["blocks"][nm], state["blocks"][nm]
         ns = {}
-        h = _conv3x3(x, p["conv1"], cfg, stride, mats, flex)
+        h = engine.conv2d(x, p["conv1"], layer=f"{nm}.conv1", stride=stride,
+                          flex=flex)
         h, ns["bn1"] = _bn(h, p["bn1"], st["bn1"], training, mom)
         h = jax.nn.relu(h)
-        h = _conv3x3(h, p["conv2"], cfg, 1, mats, flex)
+        h = engine.conv2d(h, p["conv2"], layer=f"{nm}.conv2", flex=flex)
         h, ns["bn2"] = _bn(h, p["bn2"], st["bn2"], training, mom)
         if "proj" in p:
-            sc = jax.lax.conv_general_dilated(
-                x, p["proj"], (stride, stride), "SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            sc = engine.conv2d(x, p["proj"], layer=f"{nm}.proj",
+                               stride=stride, flex=flex)
             sc, ns["bn_proj"] = _bn(sc, p["bn_proj"], st["bn_proj"],
                                     training, mom)
         else:

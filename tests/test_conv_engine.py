@@ -1,0 +1,268 @@
+"""ConvEngine tests: four-backend parity across F(2,3)/F(4,3) ×
+canonical/Legendre, bit-for-bit prepared-vs-dynamic int8, calibration
+merging, policy routing, checkpoint round-trip, and the ResNet int8
+serving path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import restore, save
+from repro.conv import (BACKENDS, ConvEngine, ConvPolicy, merge_abs_max,
+                        observed_abs_max, scales_from_abs_max)
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import WinogradSpec, direct_conv2d
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _data(cin=8, cout=12, hw=16, batch=2):
+    x = jax.random.normal(KEY, (batch, hw, hw, cin))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, cin, cout)) * 0.2
+    return x, w
+
+
+def _rel(y, ref):
+    return float(jnp.sqrt(jnp.mean((y - ref) ** 2)) /
+                 jnp.sqrt(jnp.mean(ref ** 2)))
+
+
+def _spec(m, base):
+    return WinogradSpec(m=m, r=3, base=base,
+                        quant=QuantConfig(hadamard_bits=9))
+
+
+# Fake-quant error is dominated by the per-matmul cast policy of the core
+# pipeline (large for F(4,3) — see benchmarks/transform_error.py); the
+# engine test only asserts each backend stays within its known envelope.
+_TOL = {"direct": 1e-6, "winograd_fp": 1e-4,
+        "winograd_fakequant": {2: 0.1, 4: 4.0},
+        "winograd_int8": 0.15}
+
+
+@pytest.mark.parametrize("base", ["canonical", "legendre"])
+@pytest.mark.parametrize("m", [2, 4])
+def test_backend_parity(m, base):
+    """All four backends approximate direct conv on F(m,3), both bases."""
+    x, w = _data()
+    ref = direct_conv2d(x, w, "same")
+    spec = _spec(m, base)
+    for backend in BACKENDS:
+        engine = ConvEngine(spec, ConvPolicy(backend=backend))
+        y = engine.conv2d(x, w, layer="L")
+        assert y.shape == ref.shape, backend
+        tol = _TOL[backend]
+        if isinstance(tol, dict):
+            tol = tol[m]
+        assert _rel(y, ref) < tol, (backend, m, base, _rel(y, ref))
+
+
+@pytest.mark.parametrize("base", ["canonical", "legendre"])
+@pytest.mark.parametrize("m", [2, 4])
+def test_prepared_matches_dynamic_bitforbit(m, base):
+    """Calibrating on the inference batch reproduces the dynamic-scale
+    execution exactly — same compiled prepare/reduce/execute functions."""
+    x, w = _data()
+    spec = _spec(m, base)
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    y_dyn = engine.conv2d(x, w, layer="c")
+    assert engine.prepare([("c", w)]) == ["c"]
+    with engine.calibration():
+        engine.conv2d(x, w, layer="c")
+    assert engine.packed["c"].calibrated
+    y_prep = engine.conv2d(x, None, layer="c")  # weights live in packed state
+    np.testing.assert_array_equal(np.asarray(y_dyn), np.asarray(y_prep))
+
+
+def test_calibrate_then_prepare_ordering():
+    """Scales measured before a layer is packed survive prepare()."""
+    x, w = _data()
+    spec = _spec(4, "legendre")
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    with engine.calibration():
+        engine.conv2d(x, w, layer="c")          # not packed yet
+    engine.prepare([("c", w)])
+    assert engine.packed["c"].calibrated
+    np.testing.assert_array_equal(
+        np.asarray(engine.packed["c"].in_scales),
+        np.asarray(scales_from_abs_max(observed_abs_max(x, spec))))
+
+
+def test_int8_rejects_flex():
+    """Flex-trained transforms cannot silently serve through int8."""
+    x, w = _data()
+    engine = ConvEngine(_spec(4, "legendre"),
+                        ConvPolicy(backend="winograd_int8"))
+    with pytest.raises(ValueError):
+        engine.conv2d(x, w, layer="c", flex={"GP": jnp.zeros((6, 3))})
+
+
+def test_repack_drops_weight_dependent_stats():
+    """Re-packing with new weights keeps in_scales (input-only) but drops
+    the Hadamard abs-max, which depends on the weights."""
+    x, w = _data()
+    w2 = w * 10.0
+    spec = _spec(4, "legendre")
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    engine.prepare([("c", w)])
+    with engine.calibration():
+        engine.conv2d(x, None, layer="c")
+    assert engine.packed["c"].hadamard_amax is not None
+    engine.prepare([("c", w2)])
+    pk = engine.packed["c"]
+    assert pk.calibrated and pk.hadamard_amax is None
+    with pytest.raises(ValueError):     # stale Hadamard stats block export
+        engine.export_state()
+    y = engine.conv2d(x, None, layer="c")   # dynamic requant still works
+    assert jnp.isfinite(y).all()
+
+
+def test_calibration_merges_batches():
+    """Running maxima across batches = elementwise max of per-batch maxima."""
+    spec = _spec(4, "legendre")
+    x1, w = _data()
+    x2 = jax.random.normal(jax.random.PRNGKey(7), x1.shape) * 3.0
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    engine.prepare([("c", w)])
+    with engine.calibration():
+        engine.conv2d(x1, w, layer="c")
+        engine.conv2d(x2, w, layer="c")
+    a1 = observed_abs_max(x1, spec)
+    a2 = observed_abs_max(x2, spec)
+    expect = scales_from_abs_max(merge_abs_max(a1, a2))
+    np.testing.assert_array_equal(np.asarray(engine.packed["c"].in_scales),
+                                  np.asarray(expect))
+
+
+def test_policy_routing():
+    """Stride-2, 1×1 and overridden layers bypass Winograd exactly."""
+    x, w = _data()
+    w1 = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 8, 12))
+    spec = _spec(4, "legendre")
+    policy = ConvPolicy(backend="winograd_fakequant",
+                        overrides=(("forced_direct", "direct"),))
+    engine = ConvEngine(spec, policy)
+
+    assert engine.backend_for("a", kernel_size=3, stride=1) \
+        == "winograd_fakequant"
+    assert engine.backend_for("a", kernel_size=3, stride=2) == "direct"
+    assert engine.backend_for("a", kernel_size=1, stride=1) == "direct"
+    assert engine.backend_for("forced_direct", kernel_size=3, stride=1) \
+        == "direct"
+
+    lax_s2 = jax.lax.conv_general_dilated(
+        x, w, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_array_equal(
+        np.asarray(engine.conv2d(x, w, layer="a", stride=2)),
+        np.asarray(lax_s2))
+    lax_1x1 = jax.lax.conv_general_dilated(
+        x, w1, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_array_equal(
+        np.asarray(engine.conv2d(x, w1, layer="a")), np.asarray(lax_1x1))
+
+    with pytest.raises(ValueError):
+        ConvPolicy(backend="nope")
+    with pytest.raises(ValueError):
+        ConvEngine(None, ConvPolicy(backend="winograd_int8"))
+    with pytest.raises(ValueError):  # fallback/overrides validated too
+        ConvEngine(None, ConvPolicy(backend="direct",
+                                    fallback="winograd_fp"))
+    # an override cannot force Winograd outside its regime
+    forced = ConvEngine(spec, ConvPolicy(
+        overrides=(("down", "winograd_fakequant"),)))
+    with pytest.raises(ValueError):
+        forced.conv2d(x, w, layer="down", stride=2)
+
+
+def test_hadamard_bits_follow_spec():
+    """The int8 backend mirrors the spec's QAT Hadamard stage by default."""
+    spec = _spec(4, "legendre")
+    assert ConvEngine(spec).hadamard_bits == 9
+    assert ConvEngine(spec, hadamard_bits=None).hadamard_bits is None
+    off = dataclasses.replace(spec, quant=QuantConfig.off())
+    assert ConvEngine(off).hadamard_bits is None
+
+
+def test_recalibrate_from_packed_state():
+    """A restored engine (packed weights, no raw fp weights) can be
+    recalibrated on new data: w=None throughout."""
+    x, w = _data()
+    x2 = jax.random.normal(jax.random.PRNGKey(9), x.shape) * 2.0
+    spec = _spec(4, "legendre")
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    engine.prepare([("c", w)])
+    with engine.calibration():
+        engine.conv2d(x, None, layer="c")       # packed, dynamic scales
+    s1 = engine.packed["c"].in_scales
+    with engine.calibration():                  # recalibrate, new data
+        engine.conv2d(x2, None, layer="c")
+    s2 = engine.packed["c"].in_scales
+    assert not np.array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(
+        np.asarray(s2), np.asarray(scales_from_abs_max(
+            observed_abs_max(x2, spec))))
+
+
+def test_uncalibrated_export_rejected():
+    spec = _spec(4, "legendre")
+    _, w = _data()
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    engine.prepare([("c", w)])
+    with pytest.raises(ValueError):
+        engine.export_state()
+
+
+def test_state_checkpoint_roundtrip(tmp_path):
+    """export → checkpoint.save/restore → import: identical execution."""
+    x, w = _data()
+    spec = _spec(4, "legendre")
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    engine.prepare([("c", w)])
+    with engine.calibration():
+        engine.conv2d(x, w, layer="c")
+    y = engine.conv2d(x, None, layer="c")
+
+    save(str(tmp_path), 3, engine.export_state())
+    served = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    served.prepare([("c", w)])
+    tree, step = restore(str(tmp_path), served.state_template())
+    assert step == 3
+    served.import_state(tree)
+    pk, pk0 = served.packed["c"], engine.packed["c"]
+    np.testing.assert_array_equal(np.asarray(pk.u_q), np.asarray(pk0.u_q))
+    np.testing.assert_array_equal(np.asarray(pk.in_scales),
+                                  np.asarray(pk0.in_scales))
+    np.testing.assert_array_equal(np.asarray(served.conv2d(x, None,
+                                                           layer="c")),
+                                  np.asarray(y))
+
+
+def test_resnet_int8_serving():
+    """ResNet prepare→calibrate→execute through the engine: the served
+    int8 forward stays close to the fp-Winograd forward."""
+    from repro.models import resnet as RN
+    from repro.models.param import init_params
+    cfg = RN.ResNetConfig(
+        width_mult=0.25,
+        wino=WinogradSpec(m=4, r=3, base="legendre",
+                          quant=QuantConfig(hadamard_bits=9)))
+    params = init_params(RN.param_specs(cfg), KEY)
+    state = init_params(RN.state_specs(cfg), jax.random.PRNGKey(1))
+    images = jax.random.normal(KEY, (2, 16, 16, 3))
+
+    engine = RN.make_engine(cfg, backend="winograd_int8")
+    packed = engine.prepare(RN.conv_layers(params, cfg))
+    assert "stem" in packed and len(packed) >= 8
+    # strided block entries and 1×1 shortcuts must not be packed
+    assert not any(l.endswith(".proj") for l in packed)
+    with engine.calibration():
+        RN.forward(params, state, images, cfg, engine=engine)
+    assert all(engine.packed[l].calibrated for l in packed)
+
+    y_int8, _ = RN.forward(params, state, images, cfg, engine=engine)
+    fp_engine = RN.make_engine(cfg, backend="winograd_fp")
+    y_fp, _ = RN.forward(params, state, images, cfg, engine=fp_engine)
+    assert jnp.isfinite(y_int8).all()
+    assert _rel(y_int8, y_fp) < 0.5, _rel(y_int8, y_fp)

@@ -121,17 +121,23 @@ def test_grad_compression_ring_allreduce():
             out, err = compressed_grad_mean(grads, errs, 2)
             return out["w"], err["w"]
 
-        fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                   out_specs=(P(), P("pod")),
-                                   axis_names={"pod"}, check_vma=False))
+        if hasattr(jax, "shard_map"):        # jax >= 0.5
+            def sm(f):
+                return jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                                     out_specs=(P(), P("pod")),
+                                     axis_names={"pod"}, check_vma=False)
+        else:                                # jax 0.4.x
+            from jax.experimental.shard_map import shard_map
+            def sm(f):
+                return shard_map(f, mesh=mesh, in_specs=P("pod"),
+                                 out_specs=(P(), P("pod")), check_rep=False)
+
+        fn = jax.jit(sm(f))
         mean, err = fn(g_global)
         expect = np.asarray(g_global).mean(0)
         got = np.asarray(mean)
         assert np.abs(got - expect).max() < 0.05, np.abs(got-expect).max()
-        hlo = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                    out_specs=(P(), P("pod")),
-                                    axis_names={"pod"},
-                                    check_vma=False)).lower(
+        hlo = jax.jit(sm(f)).lower(
             jax.ShapeDtypeStruct((2, 64), jnp.float32)).compile().as_text()
         assert "collective-permute" in hlo
         assert "s8[" in hlo, "compressed payload must be int8"

@@ -1,12 +1,11 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype
 sweeps with exact integer equality where the path is integer-exact."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypo import hypothesis, st
 from repro.core.quantization import QuantConfig
 from repro.core.winograd import WinogradSpec, direct_conv2d, make_matrices
 from repro.kernels import ref as kref

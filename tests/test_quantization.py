@@ -1,12 +1,10 @@
 """Quantization unit + property tests (hypothesis)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypo import hnp, hypothesis, st
 from repro.core.quantization import (QuantConfig, abs_max_scale,
                                      dequantize_int, fake_quant, qmax,
                                      quantize_int)

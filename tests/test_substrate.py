@@ -2,13 +2,12 @@
 tolerance, sharding rules, compression math, HLO cost analyzer."""
 import os
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypo import hypothesis, st
 from repro.checkpoint.checkpoint import (Checkpointer, latest_step, restore,
                                          save)
 from repro.configs import ARCHS, cells, all_cells, tiny_variant
