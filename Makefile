@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: verify quickstart bench-kernels serve-int8
+.PHONY: verify quickstart bench-kernels bench-smoke serve-int8
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -12,6 +12,11 @@ quickstart:
 
 bench-kernels:
 	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench
+
+# CI-sized benchmark: engine fused-vs-staged rows only, still emits
+# BENCH_kernel.json so the perf trajectory accumulates per commit.
+bench-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench --smoke
 
 serve-int8:
 	PYTHONPATH=src $(PY) -m repro.launch.infer_resnet --width 0.25 \

@@ -1,9 +1,14 @@
-"""Shared benchmark utilities: timing + CSV emission per the brief."""
+"""Shared benchmark utilities: timing, CSV emission per the brief, and a
+machine-readable JSON sink so the perf trajectory accumulates across PRs."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+
+#: Rows recorded by ``emit`` since process start (the JSON payload).
+_ROWS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -19,6 +24,21 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    """The brief's CSV contract: name,us_per_call,derived."""
+def emit(name: str, us_per_call: float, derived: str, **extra):
+    """The brief's CSV contract: name,us_per_call,derived.
+
+    Every row is also recorded for ``write_json``; ``extra`` fields
+    (shape tags, modelled HBM bytes, …) ride along in the JSON only.
+    """
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived, **extra})
+
+
+def write_json(path: str, **header):
+    """Dump all rows emitted so far to ``path`` as one JSON document."""
+    payload = {"schema": 1, **header, "rows": list(_ROWS)}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {len(_ROWS)} rows -> {path}")

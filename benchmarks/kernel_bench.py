@@ -2,16 +2,24 @@
 come from the §Roofline model). Compares the Winograd path against direct
 convolution and im2col-GEMM at paper-realistic layer shapes, plus an
 engine-level sweep over the ConvEngine backends including the
-dynamic-vs-calibrated int8 scaling split."""
+dynamic-vs-calibrated int8 scaling split and the fused-vs-staged serving
+pipelines.
+
+Emits the brief's CSV rows to stdout and a machine-readable
+``BENCH_kernel.json`` at the repo root (``--json`` to relocate); pass
+``--smoke`` for the CI-sized subset (``make bench-smoke``).
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_json
 from repro.conv import BACKENDS, ConvEngine, ConvPolicy
 from repro.core.quantization import QuantConfig
-from repro.core.winograd import (WinogradSpec, direct_conv2d,
+from repro.core.winograd import (WinogradSpec, _pad_amounts, direct_conv2d,
                                  winograd_conv2d)
 from repro.kernels import ref as kref
 from repro.kernels.wino_gemm import wino_gemm
@@ -21,6 +29,9 @@ SHAPES = [  # (B, H, W, Cin, Cout) — ResNet18-CIFAR ×0.5 stage shapes
     (8, 16, 16, 64, 64),
     (8, 8, 8, 128, 128),
 ]
+
+ENGINE_SHAPES = [(4, 16, 16, 32, 32), (2, 8, 8, 128, 128)]
+SMOKE_ENGINE_SHAPES = [(2, 8, 8, 16, 16)]
 
 
 def im2col_conv(x, w):
@@ -33,7 +44,56 @@ def im2col_conv(x, w):
                       w.reshape(r * r, C, -1))
 
 
-def main():
+def hbm_bytes_model(B, H, W, Ci, Co, spec: WinogradSpec,
+                    requant_glue: bool) -> tuple[int, int]:
+    """Analytic HBM bytes moved by the int8 pipeline past tile extraction.
+
+    Staged: input_transform writes Xq int8; wino_gemm reads Xq + u_q and
+    writes the (P, T, Cout) int32 H (the calibrated Hadamard requant
+    runs as its in-register epilogue; only the *dynamic* derivation —
+    ``requant_glue`` — pays an extra XLA read+write of H);
+    output_transform reads H and writes the fp32 output tiles.  Fused:
+    the H round-trips vanish — one kernel reads Xq + u_q and writes the
+    output tiles.  Returns ``(staged, fused)`` bytes per call (tile
+    reads and Xq traffic are common to both and included).
+    """
+    _, _, nt_h, _ = _pad_amounts(H, spec.m, spec.r, "same")
+    _, _, nt_w, _ = _pad_amounts(W, spec.m, spec.r, "same")
+    T = B * nt_h * nt_w
+    P = spec.n * spec.n
+    tiles_r = T * Ci * spec.n * spec.n * 4          # fp32 tile read
+    xq = P * T * Ci                                  # int8
+    uq = P * Ci * Co                                 # int8
+    h32 = P * T * Co * 4                             # int32 Hadamard plane
+    out_w = T * Co * spec.m * spec.m * 4             # fp32 output tiles
+    common = tiles_r + xq + xq + uq                  # transform + gemm reads
+    staged = common + h32                            # gemm writes H
+    if requant_glue:
+        staged += 2 * h32                            # XLA requant r+w
+    staged += h32 + out_w                            # output transform
+    fused = common + out_w
+    return staged, fused
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset: engine fused-vs-staged rows only")
+    ap.add_argument("--json", default="BENCH_kernel.json",
+                    help="machine-readable output path")
+    args = ap.parse_args(argv)
+
+    if not args.smoke:
+        xla_sweep()
+        gemm_micro()
+    engine_bench(smoke=args.smoke)
+    write_json(args.json, smoke=args.smoke,
+               backend=jax.default_backend(),
+               note="interpret-mode Pallas on CPU; TPU numbers from the "
+                    "roofline model")
+
+
+def xla_sweep():
     key = jax.random.PRNGKey(0)
     for (B, H, W, Ci, Co) in SHAPES:
         x = jax.random.normal(key, (B, H, W, Ci))
@@ -41,24 +101,29 @@ def main():
         tag = f"{B}x{H}x{W}x{Ci}->{Co}"
 
         us = time_fn(jax.jit(lambda x, w: direct_conv2d(x, w, "same")), x, w)
-        emit(f"direct_conv_{tag}", us, "lax.conv")
+        emit(f"direct_conv_{tag}", us, "lax.conv", shape=tag)
         us = time_fn(jax.jit(im2col_conv), x, w)
-        emit(f"im2col_conv_{tag}", us, "im2col+gemm")
+        emit(f"im2col_conv_{tag}", us, "im2col+gemm", shape=tag)
 
         spec_fp = WinogradSpec(m=4, r=3, base="legendre",
                                quant=QuantConfig.off())
         us = time_fn(jax.jit(lambda x, w: winograd_conv2d(x, w, spec_fp)),
                      x, w)
-        emit(f"wino_fp32_legendre_{tag}", us, "XLA einsum pipeline")
+        emit(f"wino_fp32_legendre_{tag}", us, "XLA einsum pipeline",
+             shape=tag)
 
         spec_q = WinogradSpec(m=4, r=3, base="legendre",
                               quant=QuantConfig(hadamard_bits=9))
         us = time_fn(jax.jit(lambda x, w: winograd_conv2d(x, w, spec_q)),
                      x, w)
-        emit(f"wino_q8_legendre_{tag}", us, "fake-quant QAT pipeline")
+        emit(f"wino_q8_legendre_{tag}", us, "fake-quant QAT pipeline",
+             shape=tag)
 
+
+def gemm_micro():
     # Winograd-domain GEMM: interpret-mode Pallas vs jnp oracle (CPU;
     # correctness/latency smoke only — the MXU path is the TPU target)
+    key = jax.random.PRNGKey(0)
     P, M, K, N = 36, 256, 64, 64
     xq = jax.random.randint(key, (P, M, K), -127, 128, jnp.int8)
     wq = jax.random.randint(jax.random.PRNGKey(2), (P, K, N), -127, 128,
@@ -70,49 +135,76 @@ def main():
     us = time_fn(jax.jit(kref.wino_gemm_ref), xq, wq)
     emit(f"jnp_wino_gemm_ref_{P}x{M}x{K}x{N}", us, "XLA int32 einsum")
 
-    engine_bench()
 
-
-def engine_bench():
-    """ConvEngine backend sweep + the prepare/execute split.
+def engine_bench(smoke: bool = False):
+    """ConvEngine backend sweep + the prepare/execute split + fusion.
 
     The int8 rows isolate what offline packing+calibration buys: the
     dynamic path re-transforms weights and re-derives per-position scales
     inside every call; the prepared path runs the
-    extract→transform→GEMM→output hot path only. The deep-stage shape
+    extract→transform→GEMM→output hot path only — staged as three Pallas
+    calls with fp32 XLA requant glue, or fused into a single
+    GEMM→requant→output-transform kernel (bit-identical; the HBM-bytes
+    columns model what fusion saves).  The deep-stage shape
     (weight-heavy, small tile grid) is where the offline split pays most;
     interpret-mode Pallas inflates the shared hot-path cost, so TPU
     speedups are larger than these CPU numbers.
     """
     spec = WinogradSpec(m=4, r=3, base="legendre",
                         quant=QuantConfig(hadamard_bits=9))
-    for (B, H, W, Ci, Co) in [(4, 16, 16, 32, 32), (2, 8, 8, 128, 128)]:
+    # Interpret-mode medians at few iters are noisy enough to flip the
+    # close fused-vs-staged comparison; 9 iters keeps it stable.
+    iters = 2 if smoke else 9
+    warmup = 1 if smoke else 2
+    backends = ("winograd_int8",) if smoke else BACKENDS
+    for (B, H, W, Ci, Co) in (SMOKE_ENGINE_SHAPES if smoke
+                              else ENGINE_SHAPES):
         tag = f"{B}x{H}x{W}x{Ci}->{Co}"
         x = jax.random.normal(jax.random.PRNGKey(0), (B, H, W, Ci))
         w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
+        bytes_staged, bytes_fused = hbm_bytes_model(
+            B, H, W, Ci, Co, spec, requant_glue=False)  # calibrated rows
 
-        for backend in BACKENDS:
+        dyn_us = {}
+        for backend in backends:
             engine = ConvEngine(spec, ConvPolicy(backend=backend))
             us = time_fn(lambda a, b, e=engine: e.conv2d(a, b,
                                                          layer="bench"),
-                         x, w, iters=5)
+                         x, w, warmup=warmup, iters=iters)
             emit(f"engine_{backend}_{tag}", us,
                  "dynamic scales" if backend == "winograd_int8"
-                 else "stateless")
-            if backend == "winograd_int8":
-                us_dyn = us
+                 else "stateless", shape=tag)
+            dyn_us[backend] = us
+        us_dyn = dyn_us["winograd_int8"]    # bound explicitly, not by
+        #                                     BACKENDS iteration order
 
-        prepared = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
-        prepared.prepare([("bench", w, 1)])
-        with prepared.calibration():
-            prepared.conv2d(x, w, layer="bench")
-        us_prep = time_fn(lambda a, e=prepared: e.conv2d(a, None,
-                                                         layer="bench"),
-                          x, iters=5)
-        emit(f"engine_winograd_int8_prepared_{tag}", us_prep,
-             "packed weights + calibrated scales (hot path)")
-        print(f"# {tag}: prepared int8 speedup over dynamic: "
-              f"{us_dyn / max(us_prep, 1e-9):.2f}x")
+        def _prepared(fused: bool) -> ConvEngine:
+            eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                             fused=fused)
+            eng.prepare([("bench", w, 1)])
+            with eng.calibration():
+                eng.conv2d(x, w, layer="bench")
+            return eng
+
+        rows = {}
+        for fused in (False, True):
+            eng = _prepared(fused)
+            label = "fused" if fused else "staged"
+            us = time_fn(lambda a, e=eng: e.conv2d(a, None, layer="bench"),
+                         x, warmup=warmup, iters=iters)
+            rows[label] = us
+            emit(f"engine_winograd_int8_prepared_{label}_{tag}", us,
+                 "packed+calibrated hot path: "
+                 + ("single-pass GEMM+requant+output kernel" if fused
+                    else "3 Pallas calls (requant epilogue in GEMM)"),
+                 shape=tag,
+                 hbm_bytes_model=bytes_fused if fused else bytes_staged)
+        print(f"# {tag}: prepared staged int8 speedup over dynamic: "
+              f"{us_dyn / max(rows['staged'], 1e-9):.2f}x")
+        print(f"# {tag}: fused over staged: "
+              f"{rows['staged'] / max(rows['fused'], 1e-9):.2f}x wall, "
+              f"{bytes_staged / bytes_fused:.2f}x modelled HBM bytes "
+              f"({bytes_staged} -> {bytes_fused})")
 
 
 if __name__ == "__main__":

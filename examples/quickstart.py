@@ -57,7 +57,11 @@ def main():
     #    on CPU; MXU int8×int8→int32 on TPU): prepare once — per-position
     #    int8 weights + calibrated scales — then execute the hot path
     #    with zero weight transforms and zero scale reductions per call.
-    srv = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    #    The staged pipeline (fused=False) is the bit-for-bit reference:
+    #    calibrating on a batch reproduces that batch's dynamic scales
+    #    exactly.
+    srv = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                     fused=False)
     y_dynamic = srv.conv2d(x, w, layer="conv1")     # dynamic scales
     srv.prepare([("conv1", w)])
     with srv.calibration():
@@ -66,6 +70,19 @@ def main():
     print(f"Pallas int8 kernel path: rel err {rel(y_served, ref):.4f} "
           f"(calibrated == dynamic on the calibration batch: "
           f"{bool(jnp.all(y_served == y_dynamic))})")
+
+    # 5. Fused serving (the default, fused=True): a prepared+calibrated
+    #    layer runs GEMM → 8/9-bit Hadamard requant → output transform in
+    #    ONE Pallas kernel — zero fp32 intermediates in HBM. The integer
+    #    pipeline is exactly the staged one; fp32 outputs agree to float
+    #    rounding (FMA contraction differs between the two graphs).
+    fsd = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    fsd.prepare([("conv1", w)])
+    with fsd.calibration():
+        fsd.conv2d(x, w, layer="conv1")
+    y_fused = fsd.conv2d(x, None, layer="conv1")    # single-pass kernel
+    print(f"fused single-pass serving:  rel err {rel(y_fused, ref):.4f} "
+          f"(vs staged pipeline: {rel(y_fused, y_served):.2e})")
 
 
 if __name__ == "__main__":

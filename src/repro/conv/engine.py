@@ -17,7 +17,15 @@ backend              implementation                            use
 ``winograd_int8``    Pallas kernels (``kernels.ops``): int8    inference
                      input transform → MXU int8×int8→int32     serving
                      GEMM per Winograd position → fused
-                     dequant output transform
+                     dequant output transform.  With
+                     ``fused=True`` (default) a prepared+
+                     calibrated layer serves through the
+                     single-pass ``kernels.fused_serve``
+                     kernel — GEMM, 8/9-bit Hadamard requant
+                     and output transform in ONE Pallas call,
+                     zero fp32 intermediates in HBM;
+                     integer-exact vs the staged path, fp32
+                     outputs equal to float rounding
 ===================  ========================================  ==========
 
 Every convolution in a model goes through ``ConvEngine.conv2d`` with a
@@ -45,11 +53,22 @@ Prepare/execute lifecycle (int8 serving)
    packed+calibrated state through ``repro.checkpoint`` (use
    ``state_template()`` as the restore skeleton).
 4. **execute** — ``conv2d`` on a prepared+calibrated layer dispatches to
-   the hot path: extract → ``input_transform`` → ``wino_gemm`` →
-   ``output_transform``, with zero weight transforms and zero scale
-   reductions (the Hadamard requant scale is calibrated too). Unprepared
-   int8 layers fall back to dynamic scales (correct, one extra fp pass +
-   reductions per call).
+   the hot path: extract → ``input_transform`` → fused GEMM+requant+
+   output-transform kernel (``kernels.fused_serve``), with zero weight
+   transforms, zero scale reductions (the Hadamard requant scale is
+   calibrated too) and zero fp32 intermediates in HBM. Pass
+   ``fused=False`` to force the staged three-kernel pipeline — the two
+   agree exactly in the integer Hadamard domain and to float rounding
+   (~1e-5 rel, FMA contraction) at fp32 output, so the switch is a
+   performance knob. Unprepared int8 layers fall back to dynamic scales
+   (correct, one extra fp pass + reductions per call, staged requant).
+
+A layer re-packed after a weight update keeps its calibrated
+``in_scales`` (input-only statistic) but drops ``hadamard_amax``
+(weight-dependent): it serves correctly with dynamic requant and can
+still be exported — the missing statistic round-trips as a sentinel
+leaf so recalibrate-inputs-only flows can checkpoint. Only uncalibrated
+``in_scales`` block ``export_state``.
 
 Training backends (``winograd_fakequant``/``winograd_fp``/``direct``)
 are stateless and differentiable; ``flex`` transform parameters pass
@@ -83,6 +102,16 @@ def _direct(x, w, stride, padding):
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
+def _same_packed_weights(a: PackedWinogradWeights,
+                         b: PackedWinogradWeights) -> bool:
+    """Whether two packs encode identical weights. Both leaves matter: a
+    pure rescale of w leaves u_q unchanged (the symmetric quantizer
+    absorbs it into w_scales)."""
+    return (a.u_q.shape == b.u_q.shape
+            and bool(jnp.all(a.u_q == b.u_q))
+            and bool(jnp.all(a.w_scales == b.w_scales)))
+
+
 class ConvEngine:
     """Dispatches convolutions through a policy-selected backend and owns
     the prepared/calibrated serving state (see module docstring)."""
@@ -91,11 +120,19 @@ class ConvEngine:
                  policy: Optional[ConvPolicy] = None,
                  padding: str = "same",
                  hadamard_bits: "Optional[int] | str" = "from_spec",
+                 fused: bool = True,
                  interpret: bool = True):
         """``hadamard_bits``: the int8 backend's 8/9-bit Hadamard requant
         stage. The default mirrors the spec's QAT setting
         (``spec.quant.hadamard_bits``) so serving matches what the model
-        trained with; pass an int to override or None to disable."""
+        trained with; pass an int to override or None to disable.
+
+        ``fused``: serve int8 layers through the single-pass
+        GEMM→requant→output-transform kernel whenever no dynamic
+        reduction is needed (default on; engages automatically for
+        prepared+calibrated layers — calibration and dynamic-requant
+        calls stay staged). Integer-exact vs the staged pipeline in the
+        Hadamard domain; fp32 outputs agree to float rounding."""
         if spec is None:
             policy = policy or ConvPolicy(backend="direct",
                                           fallback="direct")
@@ -112,6 +149,7 @@ class ConvEngine:
         self.policy = policy or ConvPolicy()
         self.padding = padding
         self.hadamard_bits = hadamard_bits
+        self.fused = fused
         self.interpret = interpret
         self.mats = make_matrices(spec) if spec is not None else None
         self.packed: dict[str, PackedWinogradWeights] = {}
@@ -120,6 +158,13 @@ class ConvEngine:
         self._amax_h: dict[str, jnp.ndarray] = {}   # Hadamard-product max
         self._scales: dict[str, jnp.ndarray] = {}   # finalized calibrations
         self._h_amax_final: dict[str, jnp.ndarray] = {}
+        # The packed weights each calibration observed, as (u_q,
+        # w_scales): the Hadamard abs-max is weight-dependent, so it may
+        # only reattach to a later prepare() that packs the *same*
+        # weights — and a pure rescale of w leaves u_q unchanged (the
+        # symmetric quantizer absorbs it into w_scales), so both leaves
+        # are part of the fingerprint.
+        self._calib_uq: dict[str, tuple] = {}
 
     # -- dispatch -----------------------------------------------------------
 
@@ -184,10 +229,10 @@ class ConvEngine:
                 u_q=pk.u_q, w_scales=pk.w_scales,
                 hadamard_bits=self.hadamard_bits,
                 h_amax=pk.hadamard_amax if pk.calibrated else None,
-                interpret=self.interpret)
+                fused=self.fused, interpret=self.interpret)
         return winograd_conv2d_int8(
             x, w, self.spec, pad, hadamard_bits=self.hadamard_bits,
-            interpret=self.interpret)
+            fused=self.fused, interpret=self.interpret)
 
     def _calibrate_conv(self, x, w, pk, layer, pad):
         """One int8 conv under calibration: extract tiles once, record
@@ -201,6 +246,7 @@ class ConvEngine:
         geom = _geometry(x.shape, self.spec.m, self.spec.r, pad)
         amax = _tiles_abs_max(tiles, self.spec)
         self._amax[layer] = merge_abs_max(self._amax.get(layer), amax)
+        self._calib_uq[layer] = (u_q, w_scales)
         scales = scales_from_abs_max(amax)
         if self.hadamard_bits is None:
             return execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
@@ -230,12 +276,28 @@ class ConvEngine:
         if old is not None and old.calibrated:
             # in_scales depend only on the input distribution and survive
             # a re-pack; the Hadamard abs-max depends on the weights, so
-            # it is dropped (dynamic requant until recalibrated).
-            new = dataclasses.replace(new, in_scales=old.in_scales)
-        elif layer in self._scales:      # calibrated just before packing
+            # it survives only an *idempotent* re-pack (same packed
+            # weights — the old pack is the fingerprint) and is dropped
+            # on a real update (dynamic requant until recalibrated).
+            new = dataclasses.replace(
+                new, in_scales=old.in_scales,
+                hadamard_amax=(old.hadamard_amax
+                               if _same_packed_weights(old, new) else None))
+        elif layer in self._scales:      # calibrated before packing
+            # The Hadamard abs-max reattaches only when these are the
+            # weights the calibration actually observed — a
+            # clear_packed() → prepare(new weights) flow must NOT
+            # resurrect a stale weight-dependent statistic (requant
+            # against the wrong abs-max would clip the 8/9-bit grid).
+            seen = self._calib_uq.get(layer)
+            same_w = (seen is not None
+                      and _same_packed_weights(
+                          PackedWinogradWeights(u_q=seen[0],
+                                                w_scales=seen[1]), new))
             new = dataclasses.replace(
                 new, in_scales=self._scales[layer],
-                hadamard_amax=self._h_amax_final.get(layer))
+                hadamard_amax=(self._h_amax_final.get(layer)
+                               if same_w else None))
         self.packed[layer] = new
         return True
 
@@ -255,6 +317,7 @@ class ConvEngine:
         if calibrations:
             self._scales = {}
             self._h_amax_final = {}
+            self._calib_uq = {}
 
     @contextlib.contextmanager
     def calibration(self):
@@ -304,15 +367,22 @@ class ConvEngine:
     # -- serialization ------------------------------------------------------
 
     def export_state(self) -> dict:
-        """Packed+calibrated state as a checkpointable pytree."""
-        missing = [l for l, p in self.packed.items()
-                   if not p.calibrated
-                   or (self.hadamard_bits is not None
-                       and p.hadamard_amax is None)]
+        """Packed+calibrated state as a checkpointable pytree.
+
+        Uncalibrated ``in_scales`` are a hard error (serving would fall
+        back to per-call reductions — never ship that silently). A
+        missing ``hadamard_amax`` is legal: ``prepare_layer``
+        deliberately drops it on a weight update (dynamic requant until
+        recalibrated), and it round-trips as a sentinel leaf so the tree
+        structure matches ``state_template`` regardless of per-layer
+        calibration history.
+        """
+        missing = [l for l, p in self.packed.items() if not p.calibrated]
         if missing:
-            raise ValueError("layers not calibrated (or with stale "
-                             f"Hadamard statistics): {sorted(missing)}")
-        return {"packed": {l: p.to_tree() for l, p in self.packed.items()}}
+            raise ValueError(f"layers not calibrated: {sorted(missing)}")
+        inc = self.hadamard_bits is not None
+        return {"packed": {l: p.to_tree(include_hadamard=inc)
+                           for l, p in self.packed.items()}}
 
     def state_template(self) -> dict:
         """Zero-filled tree matching ``export_state`` — the restore

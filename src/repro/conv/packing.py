@@ -23,7 +23,7 @@ through ``repro.checkpoint`` (and jit boundaries) unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,14 @@ class PackedWinogradWeights:
     products — the requant statistic for the 8/9-bit Hadamard stage
     (only when that stage is enabled; the scale formula itself stays in
     the execute graph so calibrated == dynamic bit-for-bit).
+
+    A missing ``hadamard_amax`` is a *legitimate* serving state — a
+    re-pack after a weight update drops it (the statistic depends on the
+    weights) and the layer requantizes dynamically until recalibrated.
+    It serializes as a negative sentinel leaf (abs-maxima are
+    non-negative, so the encoding is unambiguous) to keep the
+    checkpoint tree structure independent of per-layer calibration
+    history.
     """
 
     u_q: jnp.ndarray
@@ -59,28 +67,45 @@ class PackedWinogradWeights:
     in_scales: Optional[jnp.ndarray] = None
     hadamard_amax: Optional[jnp.ndarray] = None
 
+    #: Serialized stand-in for a dropped ``hadamard_amax``.
+    HADAMARD_MISSING: ClassVar[float] = -1.0
+
     @property
     def calibrated(self) -> bool:
         return self.in_scales is not None
 
-    def to_tree(self) -> dict:
-        """Plain-dict form for checkpointing (requires calibration)."""
+    def to_tree(self, include_hadamard: Optional[bool] = None) -> dict:
+        """Plain-dict form for checkpointing (requires calibration).
+
+        ``include_hadamard`` pins the presence of the ``hadamard_amax``
+        leaf (so every layer of an engine exports the same structure):
+        True writes the sentinel when the statistic was dropped, False
+        omits the leaf, None (default) includes it iff present.
+        """
         if not self.calibrated:
             raise ValueError("uncalibrated PackedWinogradWeights cannot be "
                              "serialized; run calibration first")
         tree = {"u_q": self.u_q, "w_scales": self.w_scales,
                 "in_scales": self.in_scales}
-        if self.hadamard_amax is not None:
-            tree["hadamard_amax"] = self.hadamard_amax
+        if include_hadamard is None:
+            include_hadamard = self.hadamard_amax is not None
+        if include_hadamard:
+            tree["hadamard_amax"] = (
+                self.hadamard_amax if self.hadamard_amax is not None
+                else jnp.full_like(self.in_scales, self.HADAMARD_MISSING))
         return tree
 
     @classmethod
     def from_tree(cls, tree: dict) -> "PackedWinogradWeights":
         hs = tree.get("hadamard_amax")
+        if hs is not None:
+            hs = jnp.asarray(hs)
+            if float(jnp.max(hs)) < 0:      # the dropped-stat sentinel
+                hs = None
         return cls(u_q=jnp.asarray(tree["u_q"]),
                    w_scales=jnp.asarray(tree["w_scales"]),
                    in_scales=jnp.asarray(tree["in_scales"]),
-                   hadamard_amax=None if hs is None else jnp.asarray(hs))
+                   hadamard_amax=hs)
 
 
 jax.tree_util.register_pytree_node(

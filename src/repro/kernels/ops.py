@@ -1,13 +1,26 @@
 """Jitted wrappers composing the Pallas kernels into a full int8 Winograd
 convolution (the inference path; QAT uses the fake-quant path in core/).
 
-Pipeline (NHWC):
+Staged pipeline (NHWC):
     extract tiles (XLA gather)                    → (T, Cin, n, n) fp
     kernels.input_transform   (fused, 1 HBM pass) → (n², T, Cin) int8
     kernels.wino_gemm         (MXU int8 GEMMs)    → (n², T, Cout) int32
-    [optional Hadamard requant to 8/9 bits — the paper's knob]
+    [optional Hadamard requant to 8/9 bits — the paper's knob; with
+     calibrated statistics it runs as wino_gemm's in-register epilogue,
+     dynamic derivation stays XLA glue]
     kernels.output_transform  (fused, 1 HBM pass) → (T, Cout, m, m) fp
     reassemble                                    → (N, Ho, Wo, Cout)
+
+Fused serving pipeline (``fused=True``, requires calibrated Hadamard
+statistics when the 8/9-bit stage is on):
+    extract tiles → kernels.input_transform → kernels.fused_serve
+    (GEMM → in-register Hadamard requant → output transform, ONE Pallas
+    call) → reassemble — zero fp32 intermediates in HBM; integer-exact
+    vs the staged path in the Hadamard domain, fp32 outputs equal to
+    float rounding (FMA contraction differs between the graphs).
+    Calibration (``with_stats``) and dynamic requant fall back to the
+    staged pipeline, whose full-plane reductions cannot run inside a
+    tiled kernel.
 
 Scales: per-Winograd-position symmetric scales. Production serving uses
 *calibrated* scales passed by the caller; when omitted they are derived
@@ -34,6 +47,7 @@ from repro.core.winograd import (WinogradMatrices, WinogradSpec,
                                  _extract_tiles_1d_axis, _pad_amounts,
                                  make_matrices, transform_weights_2d)
 from repro.kernels import ref as kref
+from repro.kernels.fused_serve import fused_gemm_output
 from repro.kernels.q8_matmul import q8_matmul
 from repro.kernels.wino_gemm import wino_gemm
 from repro.kernels.wino_transform import input_transform, output_transform
@@ -138,6 +152,7 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
                          w_scales: Optional[jnp.ndarray] = None,
                          hadamard_bits: Optional[int] = None,
                          h_amax: Optional[jnp.ndarray] = None,
+                         fused: bool = False,
                          interpret: bool = True) -> jnp.ndarray:
     """True-int8 Winograd conv via the Pallas kernels.
 
@@ -156,6 +171,15 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
     prepared call whose calibration saw this batch matches the dynamic
     call bit-for-bit.
 
+    ``fused=True`` requests the single-pass serving kernel
+    (``kernels.fused_serve``): GEMM, Hadamard requant and output
+    transform in one Pallas call, zero fp32 intermediates in HBM.  It
+    engages when the requant stage is off or its statistics are
+    calibrated (``h_amax``); otherwise the staged path runs (the dynamic
+    requant reduction needs the whole Hadamard plane).  Fused and staged
+    are integer-exact in the Hadamard domain and agree at fp32 output to
+    float rounding, so the flag is a performance knob.
+
     ``interpret=True`` (default here) runs the kernel bodies on CPU; on a
     real TPU deployment pass ``interpret=False``.
     """
@@ -172,17 +196,19 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
         in_scales = scales_from_abs_max(_tiles_abs_max(tiles, spec))
     return execute_int8(tiles, u_q, w_scales, in_scales, h_amax,
                         spec=spec, geom=geom, hadamard_bits=hadamard_bits,
-                        interpret=interpret)
+                        fused=fused, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "geom", "interpret",
-                                             "hadamard_bits", "with_stats"))
+                                             "hadamard_bits", "with_stats",
+                                             "fused"))
 def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
                  w_scales: jnp.ndarray, in_scales: jnp.ndarray,
                  h_amax: Optional[jnp.ndarray] = None, *,
                  spec: WinogradSpec, geom: tuple,
                  hadamard_bits: Optional[int],
-                 interpret: bool, with_stats: bool = False):
+                 interpret: bool, with_stats: bool = False,
+                 fused: bool = False):
     """The serving hot path: consumes extracted tiles, prepared weights
     and static scales.
 
@@ -194,6 +220,13 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
     calibrated and dynamic executions bit-identical on the calibration
     batch. ``with_stats=True`` (calibration) additionally returns that
     abs-max.
+
+    ``fused=True`` routes GEMM → Hadamard requant → output transform
+    through the single-pass ``kernels.fused_serve`` kernel whenever no
+    dynamic reduction is needed (requant off, or ``h_amax`` calibrated,
+    and not ``with_stats``); the staged path remains the fallback and
+    the numerical reference (integer-exact agreement in the Hadamard
+    domain, fp32 agreement to rounding).
     """
     assert not (with_stats and hadamard_bits is None)
     mats = make_matrices(spec)
@@ -201,21 +234,51 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
 
     Xq = input_transform(tiles, mats.CinvT, mats.BPT, in_scales,
                          changes_base=spec.changes_base, interpret=interpret)
-    H = wino_gemm(Xq, u_q, interpret=interpret)      # (P, T, Cout) int32
-
     deq = in_scales * w_scales                       # (P, 1)
+
+    use_fused = (fused and not with_stats
+                 and (hadamard_bits is None or h_amax is not None))
+    if use_fused:
+        if hadamard_bits is None:
+            rq = jnp.ones_like(deq)
+        else:
+            # Same scale formula as the staged requant below — keeping the
+            # fused and staged executions bit-identical.
+            rq = (jnp.maximum(h_amax.reshape(-1, 1), 1e-12)
+                  / qmax(hadamard_bits))
+        y = fused_gemm_output(Xq, u_q, deq, rq, mats.CinvT, mats.APT,
+                              m=m, requant_bits=hadamard_bits,
+                              changes_base=spec.changes_base,
+                              interpret=interpret)
+        return _reassemble(y, geom, m)
+
     amax_h = None
-    if hadamard_bits is not None:
-        # The paper's 8/9-bit Hadamard stage: requantize the int32 products
-        # onto a 2^b-level grid (per position) before the output transform.
-        hf = H.astype(jnp.float32) * deq[:, :, None]
-        if h_amax is None or with_stats:
-            amax_h = jnp.max(jnp.abs(hf), axis=(1, 2), keepdims=True)
-        amax = amax_h if h_amax is None else h_amax.reshape(-1, 1, 1)
-        s_h = jnp.maximum(amax, 1e-12) / qmax(hadamard_bits)
-        H = jnp.clip(jnp.round(hf / s_h), -qmax(hadamard_bits),
-                     qmax(hadamard_bits)).astype(jnp.int32)
-        deq = s_h[:, :, 0]
+    if (hadamard_bits is not None and h_amax is not None
+            and not with_stats):
+        # Staged serving with calibrated requant scales runs the
+        # Hadamard stage as the wino_gemm in-register epilogue: exactly
+        # the grid the XLA formula below produces (asserted in tests),
+        # minus two HBM passes over the (P, T, Cout) plane.
+        rq = (jnp.maximum(h_amax.reshape(-1, 1), 1e-12)
+              / qmax(hadamard_bits))
+        H = wino_gemm(Xq, u_q, interpret=interpret,
+                      requant_bits=hadamard_bits, deq=deq, rq=rq)
+        deq = rq
+    else:
+        H = wino_gemm(Xq, u_q, interpret=interpret)  # (P, T, Cout) int32
+        if hadamard_bits is not None:
+            # The paper's 8/9-bit Hadamard stage: requantize the int32
+            # products onto a 2^b-level grid (per position) before the
+            # output transform — deriving the scale dynamically (no
+            # calibration, or recording statistics for one).
+            hf = H.astype(jnp.float32) * deq[:, :, None]
+            if h_amax is None or with_stats:
+                amax_h = jnp.max(jnp.abs(hf), axis=(1, 2), keepdims=True)
+            amax = amax_h if h_amax is None else h_amax.reshape(-1, 1, 1)
+            s_h = jnp.maximum(amax, 1e-12) / qmax(hadamard_bits)
+            H = jnp.clip(jnp.round(hf / s_h), -qmax(hadamard_bits),
+                         qmax(hadamard_bits)).astype(jnp.int32)
+            deq = s_h[:, :, 0]
 
     y = output_transform(H, deq, mats.CinvT, mats.APT, m=m,
                          changes_base=spec.changes_base, interpret=interpret)

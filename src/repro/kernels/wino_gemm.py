@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: Winograd-domain batched int8 GEMM.
+"""Pallas TPU kernel: Winograd-domain batched int8 GEMM (+ optional
+Hadamard-requant epilogue).
 
 This is >90% of the FLOPs of a Winograd convolution: for each of the
 ``P = n²`` Winograd positions, an independent GEMM over channels
@@ -12,6 +13,16 @@ blocks and accumulates in the int32 output block across the K grid axis
 (output revisiting on the innermost axis), the canonical Pallas matmul
 schedule.
 
+The optional *requant epilogue* runs the paper's 8/9-bit Hadamard stage
+in-register on the final K grid step: the int32 accumulator is
+dequantized by the calibrated per-position ``deq = in_scale·w_scale``,
+requantized onto the 2^b-level grid with the calibrated per-position
+requant scale, and written out as int32 on that grid — replacing the
+fp32 XLA glue that used to cost two extra HBM passes over the largest
+tensor in the pipeline.  The arithmetic (fp32 multiply, round-half-even,
+clip) is exactly the staged formula, so the epilogue output is
+bit-identical to the staged requant.
+
 The TPU is the *target*; correctness is validated in ``interpret=True``
 mode against ``ref.wino_gemm_ref`` (exact integer equality).
 """
@@ -23,12 +34,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["wino_gemm", "DEFAULT_BLOCKS"]
+from repro.core.quantization import qmax
+
+__all__ = ["wino_gemm", "requant_plane", "DEFAULT_BLOCKS"]
 
 # MXU-aligned defaults: the systolic array is 128×128; K blocks of 256
 # halve the number of grid steps at an acceptable VMEM footprint
 # (128·256 + 256·128 int8 + 128·128 int32 ≈ 128 KiB per step).
 DEFAULT_BLOCKS = (128, 128, 256)
+
+
+def requant_plane(acc: jnp.ndarray, deq: jnp.ndarray, rq: jnp.ndarray,
+                  qm: int) -> jnp.ndarray:
+    """One position's Hadamard requant: int32 accumulator → fp32 values on
+    the signed ``qm``-grid.  ``deq``/``rq`` are that position's dequant and
+    requant scales (scalars).  Shared by the GEMM epilogue and the fused
+    serving kernel so both reproduce the staged XLA formula bit-for-bit
+    (fp32 multiply → round-half-even → clip)."""
+    hf = acc.astype(jnp.float32) * deq
+    return jnp.clip(jnp.round(hf / rq), -qm, qm)
 
 
 def _gemm_kernel(x_ref, w_ref, o_ref):
@@ -44,6 +68,24 @@ def _gemm_kernel(x_ref, w_ref, o_ref):
     )
 
 
+def _gemm_requant_kernel(x_ref, w_ref, deq_ref, rq_ref, o_ref, *, qm: int):
+    """GEMM block with the Hadamard-requant epilogue on the last K step."""
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, ...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _epilogue():
+        q = requant_plane(o_ref[0, ...], deq_ref[0, 0], rq_ref[0, 0], qm)
+        o_ref[0, ...] = q.astype(jnp.int32)
+
+
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -53,18 +95,31 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret",
+                                             "requant_bits"))
 def wino_gemm(x: jnp.ndarray, w: jnp.ndarray,
               blocks: tuple[int, int, int] | None = None,
-              interpret: bool = False) -> jnp.ndarray:
+              interpret: bool = False,
+              requant_bits: int | None = None,
+              deq: jnp.ndarray | None = None,
+              rq: jnp.ndarray | None = None) -> jnp.ndarray:
     """Batched per-position GEMM. x: (P,M,K) int8, w: (P,K,N) int8 → int32.
 
     Shapes need not be block-aligned; inputs are zero-padded (zeros are
     exact in integer arithmetic) and the output is cropped.
+
+    With ``requant_bits`` set, the Hadamard-requant epilogue runs on the
+    final K grid step: ``deq`` (P, 1) fp32 dequant scales
+    (in_scale·w_scale) and ``rq`` (P, 1) fp32 requant scales (the
+    calibrated ``max(h_amax, eps)/qmax(bits)``) must be passed, and the
+    int32 output lands on the signed ``2^bits``-level grid — no fp32
+    intermediate ever reaches HBM.
     """
     P, M, K = x.shape
     P2, K2, N = w.shape
     assert P == P2 and K == K2, (x.shape, w.shape)
+    if requant_bits is not None and (deq is None or rq is None):
+        raise ValueError("requant epilogue needs deq and rq scales")
     bm, bn, bk = blocks or DEFAULT_BLOCKS
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
 
@@ -73,15 +128,24 @@ def wino_gemm(x: jnp.ndarray, w: jnp.ndarray,
     Mp, Kp, Np = xp.shape[1], xp.shape[2], wp.shape[2]
 
     grid = (P, Mp // bm, Np // bn, Kp // bk)
+    gemm_specs = [
+        pl.BlockSpec((1, bm, bk), lambda p, i, j, k: (p, i, k)),
+        pl.BlockSpec((1, bk, bn), lambda p, i, j, k: (p, k, j)),
+    ]
+    if requant_bits is None:
+        kernel, in_specs, operands = _gemm_kernel, gemm_specs, (xp, wp)
+    else:
+        kernel = functools.partial(_gemm_requant_kernel,
+                                   qm=qmax(requant_bits))
+        scale_spec = pl.BlockSpec((1, 1), lambda p, i, j, k: (p, 0))
+        in_specs = gemm_specs + [scale_spec, scale_spec]
+        operands = (xp, wp, deq, rq)
     out = pl.pallas_call(
-        _gemm_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda p, i, j, k: (p, i, k)),
-            pl.BlockSpec((1, bk, bn), lambda p, i, j, k: (p, k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda p, i, j, k: (p, i, j)),
         out_shape=jax.ShapeDtypeStruct((P, Mp, Np), jnp.int32),
         interpret=interpret,
-    )(xp, wp)
+    )(*operands)
     return out[:, :M, :N]

@@ -60,8 +60,10 @@ def _input_kernel(tiles_ref, cinvt_ref, bpt_ref, scale_ref, out_ref, *,
     bpt = bpt_ref[...]
     if changes_base:
         planes = _sandwich_unrolled(cinvt, cinvt, x, n, n)
+        # stacking rows at -2 and cols at -1 already lands (bt, bc, n, n)
+        # in row-major tile order — verified exactly against
+        # ref.input_transform_fp for the base-change path.
         x = jnp.stack([jnp.stack(row, -1) for row in planes], -2)
-        x = jnp.moveaxis(x, (-2, -1), (-2, -1))      # (bt, bc, n, n)
     planes = _sandwich_unrolled(bpt, bpt, x, n, n)
     # quantize per position: scale_ref is (n*n, 1) in SMEM-like layout
     for a in range(n):

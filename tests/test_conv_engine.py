@@ -63,10 +63,15 @@ def test_backend_parity(m, base):
 @pytest.mark.parametrize("m", [2, 4])
 def test_prepared_matches_dynamic_bitforbit(m, base):
     """Calibrating on the inference batch reproduces the dynamic-scale
-    execution exactly — same compiled prepare/reduce/execute functions."""
+    execution exactly — same compiled prepare/reduce/execute functions.
+
+    Asserted on the staged pipeline (``fused=False``): the fused serving
+    kernel shares the integer pipeline bit-for-bit but its fp32 output
+    differs by FMA-contraction rounding (covered in test_fused_serve)."""
     x, w = _data()
     spec = _spec(m, base)
-    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                        fused=False)
     y_dyn = engine.conv2d(x, w, layer="c")
     assert engine.prepare([("c", w)]) == ["c"]
     with engine.calibration():
@@ -101,7 +106,8 @@ def test_int8_rejects_flex():
 
 def test_repack_drops_weight_dependent_stats():
     """Re-packing with new weights keeps in_scales (input-only) but drops
-    the Hadamard abs-max, which depends on the weights."""
+    the Hadamard abs-max, which depends on the weights; an idempotent
+    re-prepare with the same weights keeps both."""
     x, w = _data()
     w2 = w * 10.0
     spec = _spec(4, "legendre")
@@ -109,14 +115,48 @@ def test_repack_drops_weight_dependent_stats():
     engine.prepare([("c", w)])
     with engine.calibration():
         engine.conv2d(x, None, layer="c")
-    assert engine.packed["c"].hadamard_amax is not None
+    amax = engine.packed["c"].hadamard_amax
+    assert amax is not None
+    engine.prepare([("c", w)])      # idempotent re-prepare: stats survive
+    np.testing.assert_array_equal(
+        np.asarray(engine.packed["c"].hadamard_amax), np.asarray(amax))
     engine.prepare([("c", w2)])
     pk = engine.packed["c"]
     assert pk.calibrated and pk.hadamard_amax is None
-    with pytest.raises(ValueError):     # stale Hadamard stats block export
-        engine.export_state()
+    # a dropped Hadamard stat is legitimate serving state: it exports
+    # (sentinel leaf — see test_fused_serve for the full restore flow)
+    tree = engine.export_state()
+    assert float(np.max(np.asarray(
+        tree["packed"]["c"]["hadamard_amax"]))) < 0
     y = engine.conv2d(x, None, layer="c")   # dynamic requant still works
     assert jnp.isfinite(y).all()
+
+
+def test_clear_packed_then_prepare_new_weights_drops_hadamard():
+    """clear_packed() + prepare() with NEW weights must not resurrect the
+    weight-dependent Hadamard abs-max recorded for the old weights
+    (requant against a stale abs-max would clip the 8/9-bit grid);
+    re-preparing the SAME weights keeps it."""
+    x, w = _data()
+    spec = _spec(4, "legendre")
+    engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+    engine.prepare([("c", w)])
+    with engine.calibration():
+        engine.conv2d(x, None, layer="c")
+    amax = engine.packed["c"].hadamard_amax
+    assert amax is not None
+
+    engine.clear_packed()                       # the weight-update flow
+    engine.prepare([("c", w * 10.0)])           # new weights
+    pk = engine.packed["c"]
+    assert pk.calibrated and pk.hadamard_amax is None
+
+    engine.clear_packed()
+    engine.prepare([("c", w)])                  # the calibrated weights
+    pk = engine.packed["c"]
+    assert pk.calibrated
+    np.testing.assert_array_equal(np.asarray(pk.hadamard_amax),
+                                  np.asarray(amax))
 
 
 def test_calibration_merges_batches():
