@@ -14,9 +14,12 @@ bench-kernels:
 	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench
 
 # CI-sized benchmark: engine fused-vs-staged rows only, still emits
-# BENCH_kernel.json so the perf trajectory accumulates per commit.
+# BENCH_kernel.json so the perf trajectory accumulates per commit —
+# then gates the fused/staged rows against the committed baseline
+# (>20% normalized wall-time regression fails; see benchmarks/trend_check).
 bench-smoke:
 	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench --smoke
+	PYTHONPATH=src:. $(PY) -m benchmarks.trend_check
 
 serve-int8:
 	PYTHONPATH=src $(PY) -m repro.launch.infer_resnet --width 0.25 \

@@ -7,6 +7,11 @@ import time
 
 import jax
 
+# Benchmarks run with PYTHONPATH=src:. — the canonical --host-devices
+# re-exec helper lives with the mesh factories.
+from repro.launch.mesh import ensure_host_device_count as \
+    ensure_host_devices
+
 #: Rows recorded by ``emit`` since process start (the JSON payload).
 _ROWS: list[dict] = []
 

@@ -12,11 +12,13 @@ Emits the brief's CSV rows to stdout and a machine-readable
 from __future__ import annotations
 
 import argparse
+import sys
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, time_fn, write_json
+from benchmarks.common import emit, ensure_host_devices, time_fn, write_json
 from repro.conv import BACKENDS, ConvEngine, ConvPolicy
 from repro.core.quantization import QuantConfig
 from repro.core.winograd import (WinogradSpec, _pad_amounts, direct_conv2d,
@@ -81,12 +83,18 @@ def main(argv=None):
                     help="CI-sized subset: engine fused-vs-staged rows only")
     ap.add_argument("--json", default="BENCH_kernel.json",
                     help="machine-readable output path")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="split the host CPU into N XLA devices so the "
+                         "sharded rows cover real multi-device meshes")
     args = ap.parse_args(argv)
+    ensure_host_devices(args.host_devices, "benchmarks.kernel_bench",
+                        argv if argv is not None else sys.argv[1:])
 
     if not args.smoke:
         xla_sweep()
         gemm_micro()
     engine_bench(smoke=args.smoke)
+    sharded_bench(smoke=args.smoke)
     write_json(args.json, smoke=args.smoke,
                backend=jax.default_backend(),
                note="interpret-mode Pallas on CPU; TPU numbers from the "
@@ -153,12 +161,18 @@ def engine_bench(smoke: bool = False):
     spec = WinogradSpec(m=4, r=3, base="legendre",
                         quant=QuantConfig(hadamard_bits=9))
     # Interpret-mode medians at few iters are noisy enough to flip the
-    # close fused-vs-staged comparison; 9 iters keeps it stable.
-    iters = 2 if smoke else 9
-    warmup = 1 if smoke else 2
+    # close fused-vs-staged comparison — and since trend_check gates
+    # smoke rows against the committed full-run baseline, smoke must
+    # measure with the same 9 iters (per-call cost at the smoke shape is
+    # milliseconds; compile time dominates either way).
+    iters = 9
+    warmup = 2
     backends = ("winograd_int8",) if smoke else BACKENDS
+    # Full runs also cover the smoke shape so the committed
+    # BENCH_kernel.json always has baselines for the rows that CI's
+    # --smoke run emits (benchmarks.trend_check compares on row names).
     for (B, H, W, Ci, Co) in (SMOKE_ENGINE_SHAPES if smoke
-                              else ENGINE_SHAPES):
+                              else ENGINE_SHAPES + SMOKE_ENGINE_SHAPES):
         tag = f"{B}x{H}x{W}x{Ci}->{Co}"
         x = jax.random.normal(jax.random.PRNGKey(0), (B, H, W, Ci))
         w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
@@ -205,6 +219,47 @@ def engine_bench(smoke: bool = False):
               f"{rows['staged'] / max(rows['fused'], 1e-9):.2f}x wall, "
               f"{bytes_staged / bytes_fused:.2f}x modelled HBM bytes "
               f"({bytes_staged} -> {bytes_fused})")
+
+
+def sharded_bench(smoke: bool = False):
+    """Sharded fused serving: one throughput row per device count.
+
+    The prepared+calibrated engine serves through
+    ``ConvEngine(mesh=...)`` — tile-axis shard_map, every device running
+    the fused kernel on its slab — under an outer jit (the production
+    shape: one XLA program per mesh). On a stock CPU run there is one
+    device and the 1-device mesh row simply measures the shard_map
+    overhead over the unsharded fused row; pass ``--host-devices 4`` (or
+    run on a real multi-chip backend) for the scaling rows. These rows
+    are device-topology-dependent and therefore *excluded* from the
+    trend gate (``benchmarks.trend_check`` matches only the
+    fused/staged pipeline rows).
+    """
+    from jax.sharding import Mesh
+
+    spec = WinogradSpec(m=4, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9))
+    iters = 2 if smoke else 5
+    warmup = 1 if smoke else 2
+    ndev = len(jax.devices())
+    counts = sorted({d for d in (1, 2, 4, 8) if d <= ndev} | {ndev})
+    for (B, H, W, Ci, Co) in (SMOKE_ENGINE_SHAPES if smoke
+                              else ENGINE_SHAPES[-1:]):
+        tag = f"{B}x{H}x{W}x{Ci}->{Co}"
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, H, W, Ci))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
+        for d in counts:
+            mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+            eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                             mesh=mesh)
+            eng.prepare([("bench", w, 1)])
+            with eng.calibration():
+                eng.conv2d(x, w, layer="bench")
+            fn = jax.jit(lambda a, e=eng: e.conv2d(a, None, layer="bench"))
+            us = time_fn(fn, x, warmup=warmup, iters=iters)
+            emit(f"engine_winograd_int8_sharded_fused_{d}dev_{tag}", us,
+                 "tile-axis shard_map, fused kernel per slab",
+                 shape=tag, devices=d)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,127 @@
+"""CI gate on the serving-pipeline perf trajectory (BENCH_kernel.json).
+
+``make bench-smoke`` re-measures the prepared fused/staged engine rows
+and this module compares them against the baseline committed at HEAD
+(``git show HEAD:BENCH_kernel.json``): any fused or staged pipeline row
+more than ``--tol`` (default 20%) slower than its committed counterpart
+fails CI — closing the ROADMAP "BENCH trajectory" loop with an actual
+gate instead of an artifact upload.
+
+Cross-machine noise: absolute interpret-mode wall-times differ between
+the machine that committed the baseline and the CI runner, so by default
+each pipeline row is *normalized* by the dynamic-int8 row of the same
+shape (``engine_winograd_int8_<tag>``, emitted by both smoke and full
+runs): the gate then compares "pipeline time in units of dynamic time",
+which cancels machine speed while still catching real regressions in
+the fused/staged hot paths. ``--no-normalize`` compares raw µs.
+
+Sharded rows are excluded — they depend on the device topology of the
+run, not on the code.
+
+Exit codes: 0 pass (or no comparable baseline — first run on a branch
+that never committed the JSON), 1 regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+
+#: The gated rows: the prepared fused/staged serving pipelines.
+PIPELINE_ROW = re.compile(
+    r"^engine_winograd_int8_prepared_(fused|staged)_(?P<tag>.+)$")
+
+#: Per-shape normalizer row (dynamic-scale int8, same engine, same shape).
+DYNAMIC_ROW = "engine_winograd_int8_{tag}"
+
+
+def load_committed(ref: str):
+    """The baseline JSON at a git ref, or None when unavailable."""
+    try:
+        proc = subprocess.run(["git", "show", ref], capture_output=True,
+                              text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if proc.returncode != 0:
+        return None
+    try:
+        return json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def _rows(doc: dict) -> dict:
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def compare(new: dict, old: dict, tol: float, normalize: bool = True):
+    """(checked, failures): failures are human-readable row reports."""
+    new_rows, old_rows = _rows(new), _rows(old)
+    checked, failures = 0, []
+    for name, row in new_rows.items():
+        match = PIPELINE_ROW.match(name)
+        if not match or name not in old_rows:
+            continue
+        t_new, t_old = row["us_per_call"], old_rows[name]["us_per_call"]
+        scale = 1.0
+        if normalize:
+            dyn = DYNAMIC_ROW.format(tag=match.group("tag"))
+            if dyn in new_rows and dyn in old_rows \
+                    and new_rows[dyn]["us_per_call"] > 0:
+                scale = (old_rows[dyn]["us_per_call"]
+                         / new_rows[dyn]["us_per_call"])
+        adj = t_new * scale
+        checked += 1
+        if adj > t_old * (1.0 + tol):
+            failures.append(
+                f"{name}: {t_new:.1f}us (norm {adj:.1f}us) vs committed "
+                f"{t_old:.1f}us — {adj / t_old - 1.0:+.0%} exceeds "
+                f"+{tol:.0%}")
+    return checked, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_kernel.json",
+                    help="freshly-written benchmark JSON to gate")
+    ap.add_argument("--ref", default="HEAD:BENCH_kernel.json",
+                    help="git object holding the committed baseline")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="allowed fractional wall-time regression")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="compare raw us instead of dynamic-row-"
+                         "normalized times")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.json) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"trend_check: cannot read {args.json}: {e}",
+              file=sys.stderr)
+        return 1
+    old = load_committed(args.ref)
+    if old is None:
+        print(f"trend_check: no committed baseline at {args.ref}; "
+              "skipping (first run?)")
+        return 0
+
+    checked, failures = compare(new, old, args.tol,
+                                normalize=not args.no_normalize)
+    if checked == 0:
+        print("trend_check: no comparable fused/staged rows between the "
+              "fresh run and the committed baseline; skipping")
+        return 0
+    for f in failures:
+        print(f"trend_check: REGRESSION {f}", file=sys.stderr)
+    print(f"trend_check: {checked} pipeline rows vs {args.ref}, "
+          f"{len(failures)} regression(s), tol +{args.tol:.0%}"
+          + ("" if args.no_normalize else
+             " (normalized by the dynamic-int8 row per shape)"))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,20 @@ Prepare/execute lifecycle (int8 serving)
    performance knob. Unprepared int8 layers fall back to dynamic scales
    (correct, one extra fp pass + reductions per call, staged requant).
 
+Sharded serving (``mesh=``)
+===========================
+
+Built with a ``jax.sharding.Mesh``, the engine serves prepared+
+calibrated int8 layers across devices: the Winograd tile axis T is
+sharded over the mesh's data axis (``kernels.ops.execute_int8_sharded``)
+and each device runs the single-pass fused kernel on its tile slab
+against replicated packed weights — only the (T_local, Cout, m, m)
+spatial outputs are gathered. Per-slab arithmetic is untouched, so the
+sharded execution is integer-exact in the Hadamard domain and
+bit-identical at fp32 output across device counts. ``import_state``
+replicates restored state over the mesh; calibration, dynamic-requant
+and ``fused=False`` calls fall back to the single-device pipeline.
+
 A layer re-packed after a weight update keeps its calibrated
 ``in_scales`` (input-only statistic) but drops ``hadamard_amax``
 (weight-dependent): it serves correctly with dynamic requant and can
@@ -84,14 +98,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.conv.packing import (PackedWinogradWeights, merge_abs_max,
-                                pack_weights, scales_from_abs_max)
+                                pack_weights, place_packed_state,
+                                scales_from_abs_max)
 from repro.conv.policy import BACKENDS, ConvPolicy
 from repro.core.quantization import QuantConfig
 from repro.core.winograd import (WinogradSpec, make_matrices,
                                  winograd_conv2d)
 from repro.kernels.ops import (_extract, _geometry, _tiles_abs_max,
-                               execute_int8, prepare_weights_int8,
-                               winograd_conv2d_int8)
+                               execute_int8, execute_int8_sharded,
+                               prepare_weights_int8, winograd_conv2d_int8)
 
 __all__ = ["ConvEngine"]
 
@@ -121,7 +136,10 @@ class ConvEngine:
                  padding: str = "same",
                  hadamard_bits: "Optional[int] | str" = "from_spec",
                  fused: bool = True,
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 mesh=None,
+                 data_axis="data",
+                 blocks: Optional[tuple] = None):
         """``hadamard_bits``: the int8 backend's 8/9-bit Hadamard requant
         stage. The default mirrors the spec's QAT setting
         (``spec.quant.hadamard_bits``) so serving matches what the model
@@ -132,7 +150,22 @@ class ConvEngine:
         reduction is needed (default on; engages automatically for
         prepared+calibrated layers — calibration and dynamic-requant
         calls stay staged). Integer-exact vs the staged pipeline in the
-        Hadamard domain; fp32 outputs agree to float rounding."""
+        Hadamard domain; fp32 outputs agree to float rounding.
+
+        ``mesh``: a ``jax.sharding.Mesh`` to serve across. Prepared+
+        calibrated int8 layers then run through
+        ``kernels.ops.execute_int8_sharded``: the Winograd tile axis is
+        sharded over ``data_axis`` (a mesh axis name or tuple of names)
+        and each device runs the fused kernel on its slab — bit-identical
+        output on any device count. ``import_state`` additionally
+        replicates the restored packed state across the mesh. Layers that
+        cannot take the fused path (uncalibrated, dynamic requant,
+        ``fused=False``, calibration passes) fall back to the
+        single-device pipeline unchanged.
+
+        ``blocks``: (bm, bn, bk) Pallas block override reaching both the
+        staged ``wino_gemm`` and the fused serving kernel — the per-shape
+        tuning knob (``None`` → ``DEFAULT_BLOCKS``)."""
         if spec is None:
             policy = policy or ConvPolicy(backend="direct",
                                           fallback="direct")
@@ -151,6 +184,9 @@ class ConvEngine:
         self.hadamard_bits = hadamard_bits
         self.fused = fused
         self.interpret = interpret
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.blocks = blocks
         self.mats = make_matrices(spec) if spec is not None else None
         self.packed: dict[str, PackedWinogradWeights] = {}
         self._calibrating = False
@@ -223,16 +259,33 @@ class ConvEngine:
             # Packed weights win over any caller-passed ``w`` (the
             # serving contract — see the docstring); dynamic scales when
             # uncalibrated, e.g. recalibrating a restored engine.
+            if (self.mesh is not None and self.fused and pk.calibrated
+                    and (self.hadamard_bits is None
+                         or pk.hadamard_amax is not None)):
+                # Sharded fused serving: tile slabs across the mesh's
+                # data axis, replicated packed weights — same conditions
+                # as the single-device fused path (no dynamic reduction
+                # may be needed), to which it is bit-identical per slab.
+                tiles = _extract(x, self.spec.m, self.spec.r, self.spec.n,
+                                 pad)
+                geom = _geometry(x.shape, self.spec.m, self.spec.r, pad)
+                return execute_int8_sharded(
+                    tiles, pk.u_q, pk.w_scales, pk.in_scales,
+                    pk.hadamard_amax, spec=self.spec, geom=geom,
+                    mesh=self.mesh, hadamard_bits=self.hadamard_bits,
+                    interpret=self.interpret, blocks=self.blocks,
+                    data_axis=self.data_axis)
             return winograd_conv2d_int8(
                 x, None, self.spec, pad,
                 in_scales=pk.in_scales if pk.calibrated else None,
                 u_q=pk.u_q, w_scales=pk.w_scales,
                 hadamard_bits=self.hadamard_bits,
                 h_amax=pk.hadamard_amax if pk.calibrated else None,
-                fused=self.fused, interpret=self.interpret)
+                fused=self.fused, blocks=self.blocks,
+                interpret=self.interpret)
         return winograd_conv2d_int8(
             x, w, self.spec, pad, hadamard_bits=self.hadamard_bits,
-            fused=self.fused, interpret=self.interpret)
+            fused=self.fused, blocks=self.blocks, interpret=self.interpret)
 
     def _calibrate_conv(self, x, w, pk, layer, pad):
         """One int8 conv under calibration: extract tiles once, record
@@ -251,10 +304,11 @@ class ConvEngine:
         if self.hadamard_bits is None:
             return execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
                                 geom=geom, hadamard_bits=None,
-                                interpret=self.interpret)
+                                blocks=self.blocks, interpret=self.interpret)
         y, amax_h = execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
                                  geom=geom, hadamard_bits=self.hadamard_bits,
-                                 interpret=self.interpret, with_stats=True)
+                                 blocks=self.blocks, interpret=self.interpret,
+                                 with_stats=True)
         self._amax_h[layer] = merge_abs_max(self._amax_h.get(layer), amax_h)
         return y
 
@@ -400,5 +454,10 @@ class ConvEngine:
         return {"packed": {l: tmpl(p) for l, p in self.packed.items()}}
 
     def import_state(self, tree: dict):
+        """Adopt a restored packed+calibrated tree. Under a mesh the
+        arrays are first replicated across it (``place_packed_state``) so
+        every device's shard_map slab finds the weights local."""
+        if self.mesh is not None:
+            tree = place_packed_state(self.mesh, tree)
         self.packed = {l: PackedWinogradWeights.from_tree(sub)
                        for l, sub in tree["packed"].items()}

@@ -38,7 +38,24 @@ __all__ = [
     "observed_abs_max",
     "merge_abs_max",
     "scales_from_abs_max",
+    "PACKED_LEAF_AXES",
+    "packed_tree_shardings",
+    "place_packed_state",
 ]
+
+#: Logical axis names of every packed-state leaf (keys of the
+#: ``export_state``/``state_template`` trees), mapped through
+#: ``repro.distributed.sharding.rules`` when serving under a mesh. Tile
+#: sharding replicates all of them: every device consumes the whole
+#: per-position weight tensor against its tile slab, so "cout"/"cin"
+#: stay unsharded ("cout" is the future conv-TP seam) and "wino_pos" is
+#: never sharded.
+PACKED_LEAF_AXES = {
+    "u_q": ("wino_pos", "cin", "cout"),
+    "w_scales": ("wino_pos", None),
+    "in_scales": ("wino_pos", None),
+    "hadamard_amax": ("wino_pos", None),
+}
 
 
 @dataclasses.dataclass
@@ -137,3 +154,33 @@ def merge_abs_max(running: Optional[jnp.ndarray],
                   new: jnp.ndarray) -> jnp.ndarray:
     """Fold one batch's abs-max into the running calibration maxima."""
     return new if running is None else jnp.maximum(running, new)
+
+
+def packed_tree_shardings(mesh, state_tree: dict, rule_map=None) -> dict:
+    """NamedShardings congruent to an ``export_state`` tree under a mesh.
+
+    Each leaf's logical axes come from ``PACKED_LEAF_AXES`` and map
+    through the sharding rules — with the default rules every leaf is
+    replicated (tile-axis sharding: the weights ride with every device's
+    slab), so a checkpoint exported on one topology restores onto any
+    other unchanged.
+    """
+    from repro.distributed.sharding import rules, tree_shardings
+    rule_map = rule_map or rules(multi_pod="pod" in mesh.axis_names)
+    axes_tree = {"packed": {layer: {name: PACKED_LEAF_AXES[name]
+                                    for name in sub}
+                            for layer, sub in state_tree["packed"].items()}}
+    return tree_shardings(mesh, axes_tree, rule_map,
+                          abstract_tree=state_tree)
+
+
+def place_packed_state(mesh, state_tree: dict, rule_map=None) -> dict:
+    """Device-put a restored packed state onto ``mesh`` (replicated).
+
+    A checkpoint restore lands arrays on one device; the sharded serving
+    path replicates the packed weights across the mesh so each device's
+    ``shard_map`` slab finds them local — placing once here instead of
+    re-transferring inside every serving step.
+    """
+    shardings = packed_tree_shardings(mesh, state_tree, rule_map)
+    return jax.tree.map(jax.device_put, state_tree, shardings)

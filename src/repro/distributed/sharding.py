@@ -23,7 +23,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["rules", "pspec", "named_sharding", "tree_shardings",
-           "batch_pspec", "constrain"]
+           "batch_pspec", "constrain", "shard_map_compat",
+           "data_axis_extent"]
 
 
 def rules(fsdp: bool = False, multi_pod: bool = True) -> dict:
@@ -42,6 +43,17 @@ def rules(fsdp: bool = False, multi_pod: bool = True) -> dict:
         "embed": None,
         "layers": None,
         "seq": None,
+        # Conv-serving logical axes (the int8 Winograd pipeline). "T" is
+        # the flattened batch·tile axis of the Winograd domain — it is
+        # batch-like, so it shards across the full DP extent (each device
+        # runs the fused serving kernel on its tile slab). "cout" stays
+        # replicated for now: it is the tensor-parallel seam for convs
+        # (shard the per-position GEMM's N axis over "model") once a
+        # single device can no longer hold a layer's packed weights.
+        "T": data_axes,
+        "cout": None,
+        "cin": None,
+        "wino_pos": None,       # the n² Winograd positions — never sharded
         None: None,
     }
     if fsdp:
@@ -145,3 +157,30 @@ def constrain(x, mesh: Mesh, *axes):
     """with_sharding_constraint by mesh axis names (None = replicated)."""
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*axes)))
+
+
+def data_axis_extent(mesh: Mesh, axis="data") -> int:
+    """Device count along ``axis`` (a name or a tuple of names)."""
+    return _axis_extent(mesh, axis)
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``jax.shard_map`` across the 0.4/0.5+ API split.
+
+    Newer jax promotes shard_map out of experimental and eventually
+    renames the replication-check knob check_rep → check_vma; 0.4.x
+    keeps it under ``jax.experimental.shard_map``. The knob is gated on
+    the actual signature (some versions have top-level ``jax.shard_map``
+    but still the old kwarg). Either way the check is disabled — callers
+    here return per-shard outputs whose replication the checker cannot
+    infer through Pallas calls.
+    """
+    if hasattr(jax, "shard_map"):           # jax >= 0.5
+        import inspect
+        params = inspect.signature(jax.shard_map).parameters
+        knob = "check_vma" if "check_vma" in params else "check_rep"
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{knob: False})
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)

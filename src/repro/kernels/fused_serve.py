@@ -113,6 +113,12 @@ def fused_gemm_output(xq: jnp.ndarray, u_q: jnp.ndarray, deq: jnp.ndarray,
     ones), cinvt (n, n) / apt (m, n) transform operands
     → (T, Cout, m, m) fp32 spatial output tiles.
 
+    ``blocks`` (bm, bn, bk) overrides ``wino_gemm.DEFAULT_BLOCKS`` — the
+    per-shape tuning knob, reachable from ``ops.execute_int8`` and
+    ``ConvEngine(blocks=...)``; numerics are block-independent. At
+    F(6,3) the P=64-position scratch accumulator changes the optimal
+    split (the ROADMAP autotune item).
+
     Shapes need not be block-aligned: T/Cin/Cout are zero-padded (exact
     in integer arithmetic; padded rows are cropped from the output).
     Requires calibrated requant scales when ``requant_bits`` is set —

@@ -26,6 +26,13 @@ Scales: per-Winograd-position symmetric scales. Production serving uses
 *calibrated* scales passed by the caller; when omitted they are derived
 dynamically (an extra XLA reduction — fine for tests/benchmarks).
 
+Sharded serving (``execute_int8_sharded``): the fused pipeline is
+independent per tile row, so heavy-QPS batches scale past one chip by
+``shard_map``-ing the tile axis T across the mesh's data axis — each
+device runs the fused kernel on its slab against replicated packed
+weights; only the (T_local, Cout, m, m) spatial outputs are gathered.
+Bit-identical to single-device fused execution on any device count.
+
 Prepare/execute split (the LANCE-style offline/online cut): call
 ``prepare_weights_int8`` once per model to get the per-position int8
 weight tensor + scales, calibrate the input scales — and, when the
@@ -53,7 +60,8 @@ from repro.kernels.wino_gemm import wino_gemm
 from repro.kernels.wino_transform import input_transform, output_transform
 
 __all__ = ["prepare_weights_int8", "input_abs_max", "scales_from_abs_max",
-           "winograd_conv2d_int8", "execute_int8", "q8_linear"]
+           "winograd_conv2d_int8", "execute_int8", "execute_int8_sharded",
+           "q8_linear"]
 
 
 def _geometry(x_shape, m: int, r: int, padding: str):
@@ -83,6 +91,16 @@ def _reassemble(y: jnp.ndarray, geom, m: int) -> jnp.ndarray:
     y = jnp.transpose(y, (0, 1, 4, 2, 5, 3))
     y = y.reshape(N, nt_h * m, nt_w * m, -1)
     return y[:, :Ho, :Wo, :]
+
+
+def _hadamard_rq(h_amax: jnp.ndarray, hadamard_bits: int) -> jnp.ndarray:
+    """Calibrated Hadamard requant scales: (n²,)|(n²,1) abs-max → (n²,1).
+
+    THE scale formula of the 8/9-bit requant stage — shared by the
+    staged epilogue, the fused kernel's operands and the sharded path so
+    their documented bit-identity cannot drift apart.
+    """
+    return jnp.maximum(h_amax.reshape(-1, 1), 1e-12) / qmax(hadamard_bits)
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
@@ -153,6 +171,7 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
                          hadamard_bits: Optional[int] = None,
                          h_amax: Optional[jnp.ndarray] = None,
                          fused: bool = False,
+                         blocks: Optional[tuple] = None,
                          interpret: bool = True) -> jnp.ndarray:
     """True-int8 Winograd conv via the Pallas kernels.
 
@@ -180,6 +199,10 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
     are integer-exact in the Hadamard domain and agree at fp32 output to
     float rounding, so the flag is a performance knob.
 
+    ``blocks`` overrides the Pallas (bm, bn, bk) tile blocks for the GEMM
+    and fused kernels (``None`` → ``wino_gemm.DEFAULT_BLOCKS``) — the
+    per-shape tuning knob; numerics are block-independent.
+
     ``interpret=True`` (default here) runs the kernel bodies on CPU; on a
     real TPU deployment pass ``interpret=False``.
     """
@@ -196,19 +219,20 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
         in_scales = scales_from_abs_max(_tiles_abs_max(tiles, spec))
     return execute_int8(tiles, u_q, w_scales, in_scales, h_amax,
                         spec=spec, geom=geom, hadamard_bits=hadamard_bits,
-                        fused=fused, interpret=interpret)
+                        fused=fused, blocks=blocks, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "geom", "interpret",
                                              "hadamard_bits", "with_stats",
-                                             "fused"))
+                                             "fused", "blocks"))
 def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
                  w_scales: jnp.ndarray, in_scales: jnp.ndarray,
                  h_amax: Optional[jnp.ndarray] = None, *,
                  spec: WinogradSpec, geom: tuple,
                  hadamard_bits: Optional[int],
                  interpret: bool, with_stats: bool = False,
-                 fused: bool = False):
+                 fused: bool = False,
+                 blocks: Optional[tuple] = None):
     """The serving hot path: consumes extracted tiles, prepared weights
     and static scales.
 
@@ -227,6 +251,9 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
     and not ``with_stats``); the staged path remains the fallback and
     the numerical reference (integer-exact agreement in the Hadamard
     domain, fp32 agreement to rounding).
+
+    ``blocks`` overrides the Pallas (bm, bn, bk) tile blocks of the GEMM
+    / fused kernel; ``None`` keeps ``wino_gemm.DEFAULT_BLOCKS``.
     """
     assert not (with_stats and hadamard_bits is None)
     mats = make_matrices(spec)
@@ -244,12 +271,11 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
         else:
             # Same scale formula as the staged requant below — keeping the
             # fused and staged executions bit-identical.
-            rq = (jnp.maximum(h_amax.reshape(-1, 1), 1e-12)
-                  / qmax(hadamard_bits))
+            rq = _hadamard_rq(h_amax, hadamard_bits)
         y = fused_gemm_output(Xq, u_q, deq, rq, mats.CinvT, mats.APT,
                               m=m, requant_bits=hadamard_bits,
                               changes_base=spec.changes_base,
-                              interpret=interpret)
+                              blocks=blocks, interpret=interpret)
         return _reassemble(y, geom, m)
 
     amax_h = None
@@ -259,13 +285,13 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
         # Hadamard stage as the wino_gemm in-register epilogue: exactly
         # the grid the XLA formula below produces (asserted in tests),
         # minus two HBM passes over the (P, T, Cout) plane.
-        rq = (jnp.maximum(h_amax.reshape(-1, 1), 1e-12)
-              / qmax(hadamard_bits))
-        H = wino_gemm(Xq, u_q, interpret=interpret,
+        rq = _hadamard_rq(h_amax, hadamard_bits)
+        H = wino_gemm(Xq, u_q, blocks=blocks, interpret=interpret,
                       requant_bits=hadamard_bits, deq=deq, rq=rq)
         deq = rq
     else:
-        H = wino_gemm(Xq, u_q, interpret=interpret)  # (P, T, Cout) int32
+        H = wino_gemm(Xq, u_q, blocks=blocks,
+                      interpret=interpret)           # (P, T, Cout) int32
         if hadamard_bits is not None:
             # The paper's 8/9-bit Hadamard stage: requantize the int32
             # products onto a 2^b-level grid (per position) before the
@@ -286,6 +312,108 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
     if with_stats:
         return out, amax_h[:, 0, 0]
     return out
+
+
+def execute_int8_sharded(tiles: jnp.ndarray, u_q: jnp.ndarray,
+                         w_scales: jnp.ndarray, in_scales: jnp.ndarray,
+                         h_amax: Optional[jnp.ndarray] = None, *,
+                         spec: WinogradSpec, geom: tuple, mesh,
+                         hadamard_bits: Optional[int],
+                         interpret: bool = True,
+                         blocks: Optional[tuple] = None,
+                         data_axis="data") -> jnp.ndarray:
+    """Multi-device fused serving: shard the Winograd tile axis T.
+
+    The fused hot path is embarrassingly parallel over tiles — every
+    stage past extraction (input transform, per-position GEMM, Hadamard
+    requant, output transform) is independent per tile row, and all
+    weights/scales are per-position statistics shared by every tile. So
+    heavy-QPS batches scale past one chip by slicing the (T, Cin, n, n)
+    tile tensor across the mesh's ``data_axis`` (a name or tuple of
+    names, e.g. ``("pod", "data")``): each device runs the *same*
+    single-pass ``kernels.fused_serve`` kernel on its (T/D)-tile slab
+    against replicated packed weights, and only the small
+    (T_local, Cout, m, m) spatial outputs are gathered for reassembly —
+    the (P, T, Cout) Hadamard plane never crosses the interconnect.
+
+    Numerics: per-tile arithmetic is untouched (same kernels, same
+    operand order, the K grid is not split), so the sharded execution is
+    **integer-exact in the Hadamard domain and bit-identical at fp32
+    output** to the single-device fused kernel run on the full tile
+    tensor (``input_transform`` → ``fused_gemm_output``), on any device
+    count — asserted in ``tests/test_distributed.py``. Against the
+    monolithic ``execute_int8`` jit the usual cross-XLA-program caveat
+    applies (one-ULP fp32 deltas can flip an int8 rounding decision —
+    see docs/parity.md).
+
+    Requires the fused path's conditions: the Hadamard stage off, or its
+    statistics calibrated (``h_amax``) — the dynamic requant reduction
+    spans the whole (T, Cout) plane, which per-device slabs cannot see
+    without a cross-device collective on the hot path. ``T`` is
+    zero-padded up to the device count (exact: zero tiles produce zero
+    rows, cropped before reassembly).
+    """
+    from repro.distributed.sharding import data_axis_extent
+    if hadamard_bits is not None and h_amax is None:
+        raise ValueError(
+            "sharded serving requires calibrated Hadamard statistics "
+            "(h_amax) when the 8/9-bit requant stage is on — the dynamic "
+            "derivation reduces over the whole (T, Cout) plane, which "
+            "per-device tile slabs cannot see")
+    deq = in_scales * w_scales
+    if hadamard_bits is None:
+        rq = jnp.ones_like(deq)
+    else:
+        # Same scale formula as execute_int8 (shared helper) — sharded,
+        # single-device fused and staged requantize onto one grid.
+        rq = _hadamard_rq(h_amax, hadamard_bits)
+
+    ndev = data_axis_extent(mesh, data_axis)
+    T = tiles.shape[0]
+    pad = (-T) % ndev
+    if pad:
+        tiles = jnp.pad(tiles, ((0, pad), (0, 0), (0, 0), (0, 0)))
+
+    da = tuple(data_axis) if isinstance(data_axis, list) else data_axis
+    fn = _sharded_executor(spec, mesh, hadamard_bits, interpret,
+                           None if blocks is None else tuple(blocks), da)
+    y = fn(tiles, u_q, deq, rq, in_scales)
+    return _reassemble(y[:T], geom, spec.m)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_executor(spec: WinogradSpec, mesh, hadamard_bits, interpret,
+                      blocks, data_axis):
+    """shard_map slab executor, cached per static configuration.
+
+    The heavy lowering is cached regardless — ``input_transform`` and
+    ``fused_gemm_output`` are module-level jits, so their compile caches
+    hit on every call; this cache additionally stops an eagerly-served
+    mesh engine from rebuilding the slab closure + shard_map wrapper per
+    call. Deliberately NOT wrapped in an outer ``jax.jit``: folding the
+    slab into one compile unit perturbs FMA contraction by a last bit
+    and would break the documented bitwise parity with the standalone
+    fused composition (docs/parity.md); production serving jits the
+    whole forward anyway. One entry per (spec, mesh, …) — a handful of
+    live meshes, so unbounded is fine.
+    """
+    from repro.distributed.sharding import shard_map_compat
+    from jax.sharding import PartitionSpec as P
+    mats = make_matrices(spec)
+
+    def _slab(tiles_l, u_q, deq, rq, in_scales):
+        xq = input_transform(tiles_l, mats.CinvT, mats.BPT, in_scales,
+                             changes_base=spec.changes_base,
+                             interpret=interpret)
+        return fused_gemm_output(xq, u_q, deq, rq, mats.CinvT, mats.APT,
+                                 m=spec.m, requant_bits=hadamard_bits,
+                                 changes_base=spec.changes_base,
+                                 blocks=blocks, interpret=interpret)
+
+    shard = P(data_axis)
+    return shard_map_compat(_slab, mesh,
+                            in_specs=(shard, P(), P(), P(), P()),
+                            out_specs=shard)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))

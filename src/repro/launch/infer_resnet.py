@@ -19,15 +19,40 @@ kernels, end to end:
                  by default); report agreement vs the staged pipeline,
                  the dynamic-scale path and the fp reference, plus
                  wall-times.
+5. **sharded serve** — restore the same checkpoint into mesh-backed
+                 engines and serve the batch across 1/2/4/… devices
+                 (tile-axis shard_map, ``ConvEngine(mesh=...)``); one
+                 throughput row per device count. ``--host-devices N``
+                 splits the host CPU into N XLA devices for a local
+                 multi-device demo (must be set before jax initializes,
+                 which this launcher does for you).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+
+
+def _maybe_fork_host_devices(argv):
+    """Re-exec with XLA_FLAGS when --host-devices is asked for — before
+    the jax backend initializes, so the operator need not remember the
+    incantation. Shared logic: ``repro.launch.mesh``."""
+    from repro.launch.mesh import ensure_host_device_count
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--host-devices", type=int, default=0)
+    ns, _ = ap.parse_known_args(argv)
+    ensure_host_device_count(ns.host_devices,
+                             "repro.launch.infer_resnet", argv)
+
+
+if __name__ == "__main__":          # before jax backend init
+    _maybe_fork_host_devices(sys.argv[1:])
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.checkpoint.checkpoint import restore, save
 from repro.core.quantization import QuantConfig
@@ -51,10 +76,21 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--calib-steps", type=int, default=4)
     ap.add_argument("--ckpt-dir", default="/tmp/resnet_int8_ckpt")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="split the host CPU into N XLA devices for the "
+                         "sharded-serving demo (re-execs with XLA_FLAGS)")
     args = ap.parse_args(argv)
     if args.calib_steps < 1:
         ap.error("--calib-steps must be >= 1 (int8 serving needs "
                  "calibrated scales)")
+    if args.host_devices > 0 and len(jax.devices()) < args.host_devices:
+        # The XLA_FLAGS re-exec only runs when launched as a script; a
+        # programmatic main([...]) call lands here with the backend
+        # already fixed — say so instead of silently serving 1-device.
+        print(f"[warn] --host-devices {args.host_devices} requested but "
+              f"jax sees {len(jax.devices())} device(s); the re-exec "
+              "only applies when run as `python -m "
+              "repro.launch.infer_resnet` before jax initializes")
 
     cfg = RN.ResNetConfig(
         width_mult=args.width,
@@ -161,6 +197,45 @@ def main(argv=None):
         (f"fused serving adds error over staged vs the fp reference: "
          f"{err_fused:.4f} vs {err_staged:.4f}")
     np.testing.assert_array_less(rel(y_prep, y_fp), 1.0)
+
+    # 5. sharded serving: the same checkpoint restored into mesh-backed
+    # engines — the tile axis of every int8 conv shards across the
+    # mesh's "data" axis and each device runs the fused kernel on its
+    # slab. One throughput row per device count (on one CPU device the
+    # 1-device mesh row still exercises the full shard_map path; pass
+    # --host-devices 4 for a local multi-device run).
+    ndev = len(jax.devices())
+    counts = sorted({d for d in (1, 2, 4, 8) if d <= ndev} | {ndev})
+    for d in counts:
+        mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+        sharded = RN.make_engine(cfg, backend="winograd_int8", mesh=mesh)
+        # the restored tree fully defines the packed state (no
+        # prepare() needed); import replicates it across the mesh
+        sharded.import_state(tree)
+        sh_fn = jax.jit(
+            lambda im, e=sharded: _logits(params, state, im, cfg, e))
+        jax.block_until_ready(sh_fn(images))
+        t0 = time.time()
+        y_sh = jax.block_until_ready(sh_fn(images))
+        t_sh = time.time() - t0
+        y_sh = np.asarray(y_sh)
+        qps = args.batch / max(t_sh, 1e-9)
+        agree_sh = float(np.mean(np.argmax(y_sh, -1)
+                                 == np.asarray(jnp.argmax(y_prep, -1))))
+        print(f"[serve] sharded fused ({d} device{'s' if d > 1 else ''}): "
+              f"{t_sh * 1e3:.0f}ms/batch, {qps:.1f} img/s, rel vs "
+              f"single-device fused {rel(y_sh, y_prep):.4f}, argmax "
+              f"agreement {agree_sh:.2f}")
+        # Per layer the sharded execution is bit-identical to the fused
+        # kernel on the full tile tensor (tests/test_distributed.py);
+        # network logits land at quantization-noise level — each mesh
+        # compiles its own BN/glue program and one-ULP fp32 deltas flip
+        # int8 rounding downstream (docs/parity.md) — so the gate is the
+        # same as fused-vs-staged: no added error vs the fp reference.
+        err_sh = rel(y_sh, y_fp)
+        assert abs(err_sh - err_fused) < 0.05, \
+            (f"sharded serving adds error vs the fp reference: "
+             f"{err_sh:.4f} vs fused {err_fused:.4f}")
 
 
 if __name__ == "__main__":

@@ -12,9 +12,33 @@ from checkpoint and relaunch — sharding rules are mesh-shape agnostic).
 """
 from __future__ import annotations
 
+import os
+import sys
+
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh_for", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_mesh_for", "make_host_mesh",
+           "ensure_host_device_count"]
+
+
+def ensure_host_device_count(n: int, module: str, argv) -> None:
+    """Re-exec ``python -m module argv`` with the host CPU split into
+    ``n`` XLA devices (the ``--host-devices`` knob of the serving
+    launcher and benchmarks — a local multi-device demo without TPUs).
+
+    XLA fixes the device count at backend *initialization*, so the flag
+    must be in the environment before the first jax computation; callers
+    invoke this from their entry point before any timing/serving work.
+    No-op when ``n <= 0`` or the flag is already set (the re-exec'd
+    child takes this branch).
+    """
+    if n <= 0 or "--xla_force_host_platform_device_count" in \
+            os.environ.get("XLA_FLAGS", ""):
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}").strip()
+    os.execv(sys.executable, [sys.executable, "-m", module] + list(argv))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -149,21 +149,25 @@ def _bn(x, p, st, training: bool, momentum: float):
 
 
 def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
-                fused: bool = True, interpret: bool = True) -> ConvEngine:
+                fused: bool = True, interpret: bool = True,
+                mesh=None, blocks: Optional[tuple] = None) -> ConvEngine:
     """Build the config's ConvEngine.
 
     ``backend`` overrides the eligible-conv backend (e.g.
     ``"winograd_int8"`` to serve a trained checkpoint through the Pallas
     kernels without touching model code). ``fused=False`` forces the
     staged int8 pipeline (bit-identical; for benchmarking the fusion
-    win).
+    win). ``mesh`` serves prepared+calibrated int8 layers sharded across
+    the mesh's "data" axis (tile-slab parallelism — see
+    ``ConvEngine``); ``blocks`` overrides the Pallas GEMM tile blocks.
     """
     if not cfg.use_winograd or cfg.wino is None:
         return ConvEngine(cfg.wino,
                           ConvPolicy(backend="direct", fallback="direct"))
     backend = backend or cfg.conv_backend or "winograd_fakequant"
     return ConvEngine(cfg.wino, ConvPolicy(backend=backend),
-                      fused=fused, interpret=interpret)
+                      fused=fused, interpret=interpret, mesh=mesh,
+                      blocks=blocks)
 
 
 def conv_layers(params, cfg: ResNetConfig):

@@ -172,6 +172,143 @@ def test_multipod_mesh_and_fsdp_sharding():
     assert "OK" in out
 
 
+def test_sharded_fused_serving_parity():
+    """The tentpole contract of sharded int8 serving: on 1/2/4-device CPU
+    meshes, ``execute_int8_sharded`` is **bitwise identical** to the
+    single-device fused kernel composition (input_transform →
+    fused_gemm_output → reassemble on the full tile tensor) across
+    F(2,3)/F(4,3) × canonical/legendre × hadamard_bits 8/9 — per-tile
+    arithmetic is untouched by the tile-axis shard_map. The Hadamard
+    integer domain is additionally checked exactly via the wino_gemm
+    requant epilogue on per-device slabs vs the global plane."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core.quantization import QuantConfig, qmax
+        from repro.core.winograd import WinogradSpec, make_matrices
+        from repro.kernels.fused_serve import fused_gemm_output
+        from repro.kernels.ops import (_extract, _geometry, _reassemble,
+                                       _tiles_abs_max, execute_int8,
+                                       execute_int8_sharded,
+                                       prepare_weights_int8,
+                                       scales_from_abs_max)
+        from repro.kernels.wino_gemm import wino_gemm
+        from repro.kernels.wino_transform import input_transform
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 4))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 6)) * 0.2
+        for m in (2, 4):
+            for base in ("canonical", "legendre"):
+                for bits in (8, 9):
+                    spec = WinogradSpec(m=m, r=3, base=base,
+                                        quant=QuantConfig(
+                                            hadamard_bits=bits))
+                    mats = make_matrices(spec)
+                    u_q, w_s = prepare_weights_int8(w, spec)
+                    tiles = _extract(x, m, 3, spec.n, "same")
+                    geom = _geometry(x.shape, m, 3, "same")
+                    in_s = scales_from_abs_max(_tiles_abs_max(tiles, spec))
+                    _, amax = execute_int8(
+                        tiles, u_q, w_s, in_s, spec=spec, geom=geom,
+                        hadamard_bits=bits, interpret=True,
+                        with_stats=True)
+                    h_amax = amax.reshape(-1, 1)
+                    deq = in_s * w_s
+                    rq = jnp.maximum(h_amax, 1e-12) / qmax(bits)
+                    Xq = input_transform(tiles, mats.CinvT, mats.BPT,
+                                         in_s,
+                                         changes_base=spec.changes_base,
+                                         interpret=True)
+                    # single-device fused kernel on the full tile tensor
+                    ref = np.asarray(_reassemble(fused_gemm_output(
+                        Xq, u_q, deq, rq, mats.CinvT, mats.APT, m=m,
+                        requant_bits=bits,
+                        changes_base=spec.changes_base,
+                        interpret=True), geom, m))
+                    for d in (1, 2, 4):
+                        mesh = Mesh(np.array(jax.devices()[:d]),
+                                    ("data",))
+                        y = np.asarray(execute_int8_sharded(
+                            tiles, u_q, w_s, in_s, h_amax, spec=spec,
+                            geom=geom, mesh=mesh, hadamard_bits=bits,
+                            interpret=True))
+                        assert np.array_equal(y, ref), \\
+                            (m, base, bits, d, np.abs(y - ref).max())
+                    # Hadamard-domain integers: per-slab GEMM+requant
+                    # epilogue == the matching slice of the global plane
+                    H = np.asarray(wino_gemm(Xq, u_q, interpret=True,
+                                             requant_bits=bits, deq=deq,
+                                             rq=rq))
+                    T = Xq.shape[1]
+                    for d in (2, 4):
+                        parts = [np.asarray(wino_gemm(
+                            Xq[:, i * T // d:(i + 1) * T // d], u_q,
+                            interpret=True, requant_bits=bits, deq=deq,
+                            rq=rq)) for i in range(d)]
+                        assert np.array_equal(
+                            np.concatenate(parts, axis=1), H), \\
+                            (m, base, bits, d)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_export_restore_serve_under_mesh():
+    """The full serving lifecycle under a mesh: calibrate+pack on one
+    engine, checkpoint, restore into mesh-backed engines
+    (``import_state`` replicates the packed state), and serve — sharded
+    outputs bitwise identical across 1/2/4-device meshes and matching
+    the single-device fused engine to quantization-noise level (the
+    cross-XLA-program rounding contract, docs/parity.md)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.checkpoint.checkpoint import restore, save
+        from repro.conv import ConvEngine, ConvPolicy
+        from repro.conv.packing import packed_tree_shardings
+        from repro.core.quantization import QuantConfig
+        from repro.core.winograd import WinogradSpec
+        import tempfile
+
+        spec = WinogradSpec(m=4, r=3, base="legendre",
+                            quant=QuantConfig(hadamard_bits=9))
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 12)) * 0.2
+
+        src = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+        src.prepare([("c", w)])
+        with src.calibration():
+            src.conv2d(x, w, layer="c")
+        ckpt = tempfile.mkdtemp()
+        save(ckpt, 0, src.export_state())
+        y_fused = np.asarray(src.conv2d(x, None, layer="c"))
+
+        ys = {}
+        for d in (1, 2, 4):
+            mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+            eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                             mesh=mesh)
+            eng.prepare([("c", w)])
+            tree, _ = restore(ckpt, eng.state_template())
+            eng.import_state(tree)
+            # the restored packed state is replicated across the mesh
+            shd = packed_tree_shardings(mesh, eng.state_template())
+            for name, arr in [("u_q", eng.packed["c"].u_q),
+                              ("in_scales", eng.packed["c"].in_scales)]:
+                want = shd["packed"]["c"][name]
+                assert arr.sharding.is_equivalent_to(want, arr.ndim), \\
+                    (d, name, arr.sharding)
+            ys[d] = np.asarray(eng.conv2d(x, None, layer="c"))
+        assert np.array_equal(ys[1], ys[2]) and \\
+            np.array_equal(ys[1], ys[4])
+        rel = float(np.sqrt(((ys[1] - y_fused) ** 2).mean())
+                    / np.sqrt((y_fused ** 2).mean()))
+        assert rel < 1e-2, rel          # quantization-noise level
+        print("OK", rel)
+    """)
+    assert "OK" in out
+
+
 def test_dryrun_cell_on_test_mesh():
     """The dry-run path itself (lower→compile→analysis) on an 8-device
     mesh — exercises the exact production code with a small mesh."""

@@ -171,6 +171,29 @@ def test_engine_fused_default_and_matches_staged():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_engine_blocks_override_reaches_kernels():
+    """``blocks=`` flows from ConvEngine through execute_int8 into the
+    fused kernel (and the staged GEMM): a non-default block split forces
+    a real multi-step grid and must reproduce the default-blocks serving
+    output — block splits only re-tile exact integer arithmetic."""
+    x = jax.random.normal(KEY, (2, 16, 16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 12)) * 0.2
+    spec = _spec(4, "legendre", 9)
+
+    def serve(blocks, fused):
+        eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                         fused=fused, blocks=blocks)
+        eng.prepare([("c", w)])
+        with eng.calibration():
+            eng.conv2d(x, w, layer="c")
+        return np.asarray(eng.conv2d(x, None, layer="c"))
+
+    for fused in (True, False):
+        np.testing.assert_allclose(serve((8, 8, 8), fused),
+                                   serve(None, fused),
+                                   rtol=1e-4, atol=1e-4)
+
+
 def test_fused_calibration_matches_dynamic():
     """PR 1's core invariant survives fusion: calibrating on the
     inference batch reproduces the dynamic-scale (staged) execution —
