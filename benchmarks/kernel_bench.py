@@ -80,7 +80,9 @@ def hbm_bytes_model(B, H, W, Ci, Co, spec: WinogradSpec,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized subset: engine fused-vs-staged rows only")
+                    help="CI-sized subset: engine fused-vs-staged rows "
+                         "(incl. the F(6,3) pipeline + autotune rows) "
+                         "only")
     ap.add_argument("--json", default="BENCH_kernel.json",
                     help="machine-readable output path")
     ap.add_argument("--host-devices", type=int, default=0,
@@ -94,6 +96,8 @@ def main(argv=None):
         xla_sweep()
         gemm_micro()
     engine_bench(smoke=args.smoke)
+    f63_bench(smoke=args.smoke)
+    autotune_bench(smoke=args.smoke)
     sharded_bench(smoke=args.smoke)
     write_json(args.json, smoke=args.smoke,
                backend=jax.default_backend(),
@@ -144,6 +148,41 @@ def gemm_micro():
     emit(f"jnp_wino_gemm_ref_{P}x{M}x{K}x{N}", us, "XLA int32 einsum")
 
 
+def prepared_pipeline_rows(spec, shape, tag, iters, warmup,
+                           derived=None) -> dict:
+    """Time the prepared staged/fused engine rows for one (spec, shape).
+
+    THE single encoding of the prepared-pipeline row protocol (engine
+    build → prepare → calibrate → eager serve timing, the
+    ``engine_winograd_int8_prepared_<label>_<tag>`` naming that
+    ``trend_check.PIPELINE_ROW`` gates, and the HBM-bytes model
+    column) — shared by the F(4,3) and F(6,3) sections so the gate
+    contract cannot drift between them. Returns {label: us}.
+    """
+    B, H, W, Ci, Co = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, H, W, Ci))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
+    bytes_staged, bytes_fused = hbm_bytes_model(
+        B, H, W, Ci, Co, spec, requant_glue=False)     # calibrated rows
+    rows = {}
+    for fused in (False, True):
+        eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                         fused=fused)
+        eng.prepare([("bench", w, 1)])
+        with eng.calibration():
+            eng.conv2d(x, w, layer="bench")
+        label = "fused" if fused else "staged"
+        us = time_fn(lambda a, e=eng: e.conv2d(a, None, layer="bench"),
+                     x, warmup=warmup, iters=iters)
+        rows[label] = us
+        emit(f"engine_winograd_int8_prepared_{label}_{tag}", us,
+             (derived or {}).get(label,
+                                 f"packed+calibrated {label} hot path"),
+             shape=tag,
+             hbm_bytes_model=bytes_fused if fused else bytes_staged)
+    return rows
+
+
 def engine_bench(smoke: bool = False):
     """ConvEngine backend sweep + the prepare/execute split + fusion.
 
@@ -192,33 +231,84 @@ def engine_bench(smoke: bool = False):
         us_dyn = dyn_us["winograd_int8"]    # bound explicitly, not by
         #                                     BACKENDS iteration order
 
-        def _prepared(fused: bool) -> ConvEngine:
-            eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
-                             fused=fused)
-            eng.prepare([("bench", w, 1)])
-            with eng.calibration():
-                eng.conv2d(x, w, layer="bench")
-            return eng
-
-        rows = {}
-        for fused in (False, True):
-            eng = _prepared(fused)
-            label = "fused" if fused else "staged"
-            us = time_fn(lambda a, e=eng: e.conv2d(a, None, layer="bench"),
-                         x, warmup=warmup, iters=iters)
-            rows[label] = us
-            emit(f"engine_winograd_int8_prepared_{label}_{tag}", us,
-                 "packed+calibrated hot path: "
-                 + ("single-pass GEMM+requant+output kernel" if fused
-                    else "3 Pallas calls (requant epilogue in GEMM)"),
-                 shape=tag,
-                 hbm_bytes_model=bytes_fused if fused else bytes_staged)
+        rows = prepared_pipeline_rows(
+            spec, (B, H, W, Ci, Co), tag, iters, warmup,
+            derived={"fused": "packed+calibrated hot path: single-pass "
+                              "GEMM+requant+output kernel",
+                     "staged": "packed+calibrated hot path: 3 Pallas "
+                               "calls (requant epilogue in GEMM)"})
         print(f"# {tag}: prepared staged int8 speedup over dynamic: "
               f"{us_dyn / max(rows['staged'], 1e-9):.2f}x")
         print(f"# {tag}: fused over staged: "
               f"{rows['staged'] / max(rows['fused'], 1e-9):.2f}x wall, "
               f"{bytes_staged / bytes_fused:.2f}x modelled HBM bytes "
               f"({bytes_staged} -> {bytes_fused})")
+
+
+def f63_bench(smoke: bool = False):
+    """F(6,3) int8 serving rows: the large-tile spec through the same
+    prepared fused/staged pipelines (P = 64 positions, 2.25× fewer
+    multiplications per output than F(4,3) at higher transform cost).
+    Rows follow the prepared-pipeline naming, so the trend gate covers
+    them once a baseline is committed; the dynamic row doubles as the
+    per-shape normalizer."""
+    spec = WinogradSpec(m=6, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9))
+    iters, warmup = 9, 2
+    shapes = [(2, 12, 12, 16, 16)] if smoke else \
+        [(2, 12, 12, 16, 16), (2, 12, 12, 64, 64)]
+    for (B, H, W, Ci, Co) in shapes:
+        tag = f"f63_{B}x{H}x{W}x{Ci}->{Co}"
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, H, W, Ci))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
+
+        engine = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+        us_dyn = time_fn(lambda a, b, e=engine: e.conv2d(a, b,
+                                                         layer="bench"),
+                         x, w, warmup=warmup, iters=iters)
+        emit(f"engine_winograd_int8_{tag}", us_dyn, "dynamic scales",
+             shape=tag)
+        prepared_pipeline_rows(
+            spec, (B, H, W, Ci, Co), tag, iters, warmup,
+            derived={"fused": "packed+calibrated F(6,3) hot path",
+                     "staged": "packed+calibrated F(6,3) hot path"})
+
+
+def autotune_bench(smoke: bool = False):
+    """Autotuned-vs-default block rows for the fused serving kernel.
+
+    One pair of rows per (spec, shape): the spec-default (bm, bn, bk)
+    heuristic and the ``repro.conv.autotune`` winner on synthetic
+    operands of exactly the serving shape. These are wall-only rows
+    (numerics are block-independent) and deliberately do NOT match the
+    trend gate's pipeline-row pattern — the tuner's own argmin already
+    guarantees tuned ≤ default up to timer noise; re-gating them in CI
+    would gate the noise.
+    """
+    from repro.conv.autotune import autotune_blocks
+
+    cases = [("f43", WinogradSpec(m=4, r=3, base="legendre",
+                                  quant=QuantConfig(hadamard_bits=9)),
+              (288, 32, 32)),
+             ("f63", WinogradSpec(m=6, r=3, base="legendre",
+                                  quant=QuantConfig(hadamard_bits=9)),
+              (128, 64, 64))]
+    if smoke:
+        cases = cases[-1:]
+    for name, spec, (T, Ci, Co) in cases:
+        tag = f"{name}_T{T}x{Ci}->{Co}"
+        res = autotune_blocks(spec, T, Ci, Co, hadamard_bits=9,
+                              interpret=True, iters=3 if smoke else 5,
+                              warmup=1, max_candidates=6 if smoke else 10)
+        emit(f"autotune_fused_default_{tag}", res.default_us,
+             "spec-default blocks", shape=tag,
+             blocks=list(res.default_blocks))
+        emit(f"autotune_fused_tuned_{tag}", res.us,
+             "autotuned blocks", shape=tag, blocks=list(res.blocks),
+             speedup_over_default=round(res.speedup, 3))
+        print(f"# autotune {tag}: {res.default_blocks} "
+              f"{res.default_us:.0f}us -> {res.blocks} {res.us:.0f}us "
+              f"({res.speedup:.2f}x)")
 
 
 def sharded_bench(smoke: bool = False):

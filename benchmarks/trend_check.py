@@ -16,7 +16,11 @@ which cancels machine speed while still catching real regressions in
 the fused/staged hot paths. ``--no-normalize`` compares raw µs.
 
 Sharded rows are excluded — they depend on the device topology of the
-run, not on the code.
+run, not on the code. Autotune rows are excluded too (the tuner's own
+argmin is the guarantee; gating them would gate timer noise). Pipeline
+rows *added* by a PR (a new spec such as F(6,3), a new shape) have no
+committed counterpart yet: they are reported but not gated until a
+baseline containing them is committed.
 
 Exit codes: 0 pass (or no comparable baseline — first run on a branch
 that never committed the JSON), 1 regression.
@@ -57,12 +61,23 @@ def _rows(doc: dict) -> dict:
 
 
 def compare(new: dict, old: dict, tol: float, normalize: bool = True):
-    """(checked, failures): failures are human-readable row reports."""
+    """(checked, failures, fresh): failures are human-readable row
+    reports; ``fresh`` lists pipeline rows with no committed baseline.
+
+    Only rows present in BOTH the fresh run and the committed baseline
+    are gated — a PR that *adds* pipeline rows (a new spec like F(6,3),
+    a new shape) must not fail CI for having nothing to compare its new
+    rows against. They are reported, and start being gated on the next
+    commit that includes them in BENCH_kernel.json.
+    """
     new_rows, old_rows = _rows(new), _rows(old)
-    checked, failures = 0, []
+    checked, failures, fresh = 0, [], []
     for name, row in new_rows.items():
         match = PIPELINE_ROW.match(name)
-        if not match or name not in old_rows:
+        if not match:
+            continue
+        if name not in old_rows:
+            fresh.append(name)
             continue
         t_new, t_old = row["us_per_call"], old_rows[name]["us_per_call"]
         scale = 1.0
@@ -79,7 +94,7 @@ def compare(new: dict, old: dict, tol: float, normalize: bool = True):
                 f"{name}: {t_new:.1f}us (norm {adj:.1f}us) vs committed "
                 f"{t_old:.1f}us — {adj / t_old - 1.0:+.0%} exceeds "
                 f"+{tol:.0%}")
-    return checked, failures
+    return checked, failures, fresh
 
 
 def main(argv=None) -> int:
@@ -108,8 +123,11 @@ def main(argv=None) -> int:
               "skipping (first run?)")
         return 0
 
-    checked, failures = compare(new, old, args.tol,
-                                normalize=not args.no_normalize)
+    checked, failures, fresh = compare(new, old, args.tol,
+                                       normalize=not args.no_normalize)
+    if fresh:
+        print(f"trend_check: {len(fresh)} new pipeline row(s) without a "
+              f"committed baseline — not gated: {', '.join(sorted(fresh))}")
     if checked == 0:
         print("trend_check: no comparable fused/staged rows between the "
               "fresh run and the committed baseline; skipping")

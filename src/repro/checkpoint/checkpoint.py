@@ -120,6 +120,13 @@ def restore(directory: str, tree_like: Any, step: Optional[int] = None,
     new_leaves = []
     for p, leaf in leaves_with_paths:
         key = _SEP.join(_path_str(x) for x in p)
+        if key not in data:
+            raise ValueError(
+                f"checkpoint at {base} has no leaf {key!r} that the "
+                f"restore template expects — the state schema grew since "
+                f"this checkpoint was written (e.g. a new packed-state "
+                f"leaf). Re-export the state with the current code, or "
+                f"restore with the template that wrote it.")
         arr = data[key]
         if dtypes.get(key) == "bfloat16":
             arr = arr.view(ml_dtypes.bfloat16)

@@ -107,6 +107,7 @@ from repro.core.winograd import (WinogradSpec, make_matrices,
 from repro.kernels.ops import (_extract, _geometry, _tiles_abs_max,
                                execute_int8, execute_int8_sharded,
                                prepare_weights_int8, winograd_conv2d_int8)
+from repro.kernels.wino_gemm import validate_blocks
 
 __all__ = ["ConvEngine"]
 
@@ -139,7 +140,9 @@ class ConvEngine:
                  interpret: bool = True,
                  mesh=None,
                  data_axis="data",
-                 blocks: Optional[tuple] = None):
+                 blocks: Optional[tuple] = None,
+                 autotune: bool = False,
+                 autotune_opts: Optional[dict] = None):
         """``hadamard_bits``: the int8 backend's 8/9-bit Hadamard requant
         stage. The default mirrors the spec's QAT setting
         (``spec.quant.hadamard_bits``) so serving matches what the model
@@ -164,8 +167,23 @@ class ConvEngine:
         single-device pipeline unchanged.
 
         ``blocks``: (bm, bn, bk) Pallas block override reaching both the
-        staged ``wino_gemm`` and the fused serving kernel — the per-shape
-        tuning knob (``None`` → ``DEFAULT_BLOCKS``)."""
+        staged ``wino_gemm`` and the fused serving kernel — the manual
+        per-shape tuning knob. When set it wins over everything,
+        including per-layer autotuned blocks; ``None`` defers to the
+        packed state's autotuned blocks, then to the spec default
+        (``wino_gemm.default_blocks``). Malformed values raise
+        ``ValueError`` here, before any kernel launch.
+
+        ``autotune``: tune the Pallas block split per (spec, shape)
+        offline (``repro.conv.autotune``). Calibration fixes each int8
+        layer's tile geometry, so ``end_calibration`` times the fused
+        kernel over the candidate splits once per distinct shape and
+        caches each layer's winner in its packed state — a checkpoint
+        then carries the tuned ``(bm, bn, bk)`` and *serving never
+        re-tunes*. Numerics are block-independent; the knob changes
+        wall-time only. ``autotune_opts`` forwards keyword arguments to
+        ``repro.conv.autotune.autotune_blocks`` (``iters``,
+        ``max_candidates``, …) to bound the search cost."""
         if spec is None:
             policy = policy or ConvPolicy(backend="direct",
                                           fallback="direct")
@@ -186,7 +204,9 @@ class ConvEngine:
         self.interpret = interpret
         self.mesh = mesh
         self.data_axis = data_axis
-        self.blocks = blocks
+        self.blocks = validate_blocks(blocks)
+        self.autotune = autotune
+        self.autotune_opts = dict(autotune_opts or {})
         self.mats = make_matrices(spec) if spec is not None else None
         self.packed: dict[str, PackedWinogradWeights] = {}
         self._calibrating = False
@@ -194,6 +214,9 @@ class ConvEngine:
         self._amax_h: dict[str, jnp.ndarray] = {}   # Hadamard-product max
         self._scales: dict[str, jnp.ndarray] = {}   # finalized calibrations
         self._h_amax_final: dict[str, jnp.ndarray] = {}
+        # (T, Cin, Cout) tile geometry observed per layer during
+        # calibration — the shape key the autotuner searches over.
+        self._tile_geom: dict[str, tuple] = {}
         # The packed weights each calibration observed, as (u_q,
         # w_scales): the Hadamard abs-max is weight-dependent, so it may
         # only reattach to a later prepare() that packs the *same*
@@ -207,9 +230,21 @@ class ConvEngine:
     def backend_for(self, layer: str, *, kernel_size: int, stride: int,
                     in_channels: Optional[int] = None) -> str:
         r = self.spec.r if self.spec is not None else None
+        m = self.spec.m if self.spec is not None else None
         return self.policy.backend_for(layer, kernel_size=kernel_size,
                                        stride=stride, spec_r=r,
-                                       in_channels=in_channels)
+                                       in_channels=in_channels, spec_m=m)
+
+    def _layer_blocks(self, pk: Optional[PackedWinogradWeights]
+                      ) -> Optional[tuple]:
+        """Resolve the Pallas blocks for one call: the engine-wide manual
+        override wins, then the layer's autotuned blocks, then None (the
+        kernels fall back to the spec default)."""
+        if self.blocks is not None:
+            return self.blocks
+        if pk is not None and pk.blocks is not None:
+            return pk.block_tuple()
+        return None
 
     def conv2d(self, x: jnp.ndarray, w: Optional[jnp.ndarray], *,
                layer: str = "conv", stride: int = 1,
@@ -273,7 +308,8 @@ class ConvEngine:
                     tiles, pk.u_q, pk.w_scales, pk.in_scales,
                     pk.hadamard_amax, spec=self.spec, geom=geom,
                     mesh=self.mesh, hadamard_bits=self.hadamard_bits,
-                    interpret=self.interpret, blocks=self.blocks,
+                    interpret=self.interpret,
+                    blocks=self._layer_blocks(pk),
                     data_axis=self.data_axis)
             return winograd_conv2d_int8(
                 x, None, self.spec, pad,
@@ -281,7 +317,7 @@ class ConvEngine:
                 u_q=pk.u_q, w_scales=pk.w_scales,
                 hadamard_bits=self.hadamard_bits,
                 h_amax=pk.hadamard_amax if pk.calibrated else None,
-                fused=self.fused, blocks=self.blocks,
+                fused=self.fused, blocks=self._layer_blocks(pk),
                 interpret=self.interpret)
         return winograd_conv2d_int8(
             x, w, self.spec, pad, hadamard_bits=self.hadamard_bits,
@@ -300,14 +336,19 @@ class ConvEngine:
         amax = _tiles_abs_max(tiles, self.spec)
         self._amax[layer] = merge_abs_max(self._amax.get(layer), amax)
         self._calib_uq[layer] = (u_q, w_scales)
+        # Calibration fixes the serving tile geometry — the shape key
+        # the block autotuner searches at end_calibration.
+        self._tile_geom[layer] = (int(tiles.shape[0]),
+                                  int(u_q.shape[1]), int(u_q.shape[2]))
+        blocks = self._layer_blocks(pk)
         scales = scales_from_abs_max(amax)
         if self.hadamard_bits is None:
             return execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
                                 geom=geom, hadamard_bits=None,
-                                blocks=self.blocks, interpret=self.interpret)
+                                blocks=blocks, interpret=self.interpret)
         y, amax_h = execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
                                  geom=geom, hadamard_bits=self.hadamard_bits,
-                                 blocks=self.blocks, interpret=self.interpret,
+                                 blocks=blocks, interpret=self.interpret,
                                  with_stats=True)
         self._amax_h[layer] = merge_abs_max(self._amax_h.get(layer), amax_h)
         return y
@@ -327,6 +368,11 @@ class ConvEngine:
             return False
         old = self.packed.get(layer)
         new = pack_weights(w, self.spec)
+        if (old is not None and old.blocks is not None
+                and old.u_q.shape == new.u_q.shape):
+            # Autotuned blocks depend on the (spec, shape) only — they
+            # survive any same-shape re-pack, weight update or not.
+            new = dataclasses.replace(new, blocks=old.blocks)
         if old is not None and old.calibrated:
             # in_scales depend only on the input distribution and survive
             # a re-pack; the Hadamard abs-max depends on the weights, so
@@ -397,6 +443,12 @@ class ConvEngine:
 
         Scales are kept for layers not packed yet, so
         calibrate-then-prepare orderings work too.
+
+        With ``autotune=True`` this is also where the Pallas block
+        search runs: calibration observed each layer's tile geometry, so
+        every packed layer's fused-kernel block split is tuned here —
+        once per distinct (spec, shape) — and cached into the packed
+        state, riding into ``export_state`` checkpoints.
         """
         self._calibrating = False
         scales = {}
@@ -416,7 +468,41 @@ class ConvEngine:
                     self.packed[layer], in_scales=s, hadamard_amax=hs)
         self._amax = {}
         self._amax_h = {}
+        if self.autotune:
+            self.autotune_packed()
         return scales
+
+    def autotune_packed(self) -> dict[str, tuple]:
+        """Tune the fused-kernel block split of every packed layer whose
+        tile geometry calibration recorded; cache each winner in the
+        packed state (``PackedWinogradWeights.blocks``).
+
+        Runs automatically from ``end_calibration`` when the engine was
+        built with ``autotune=True``; callable directly for an explicit
+        re-tune. Identically-shaped layers share one timed search
+        (``repro.conv.autotune`` memoises per shape). Returns
+        {layer: (bm, bn, bk)}.
+        """
+        from repro.conv.autotune import autotune_blocks
+        tuned = {}
+        for layer, geom in self._tile_geom.items():
+            pk = self.packed.get(layer)
+            if pk is None:
+                continue
+            res = autotune_blocks(self.spec, *geom,
+                                  hadamard_bits=self.hadamard_bits,
+                                  interpret=self.interpret,
+                                  **self.autotune_opts)
+            tuned[layer] = res.blocks
+            self.packed[layer] = dataclasses.replace(
+                pk, blocks=jnp.asarray(res.blocks, jnp.int32))
+        return tuned
+
+    def clear_tuned_blocks(self):
+        """Drop every layer's autotuned blocks (serve with the spec
+        defaults again) — the tuned-vs-default comparison knob."""
+        self.packed = {l: dataclasses.replace(p, blocks=None)
+                       for l, p in self.packed.items()}
 
     # -- serialization ------------------------------------------------------
 
@@ -450,6 +536,9 @@ class ConvEngine:
                 t["hadamard_amax"] = (p.hadamard_amax
                                         if p.hadamard_amax is not None
                                         else zeros)
+            t["blocks"] = (p.blocks if p.blocks is not None
+                           else jnp.full((3,), PackedWinogradWeights
+                                         .BLOCKS_MISSING, jnp.int32))
             return t
         return {"packed": {l: tmpl(p) for l, p in self.packed.items()}}
 

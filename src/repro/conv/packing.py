@@ -55,6 +55,7 @@ PACKED_LEAF_AXES = {
     "w_scales": ("wino_pos", None),
     "in_scales": ("wino_pos", None),
     "hadamard_amax": ("wino_pos", None),
+    "blocks": (None,),          # (3,) autotuned (bm, bn, bk) — replicated
 }
 
 
@@ -77,15 +78,43 @@ class PackedWinogradWeights:
     non-negative, so the encoding is unambiguous) to keep the
     checkpoint tree structure independent of per-layer calibration
     history.
+
+    ``blocks``: (3,) int32 — the autotuned per-layer (bm, bn, bk) Pallas
+    block split (``repro.conv.autotune``), or None for the spec default.
+    Shape-dependent only (never weight-dependent), so it survives a
+    re-pack; serializes with a negative sentinel like ``hadamard_amax``
+    (block dims are positive) so serving never re-tunes after a
+    checkpoint restore.
     """
 
     u_q: jnp.ndarray
     w_scales: jnp.ndarray
     in_scales: Optional[jnp.ndarray] = None
     hadamard_amax: Optional[jnp.ndarray] = None
+    blocks: Optional[jnp.ndarray] = None
 
     #: Serialized stand-in for a dropped ``hadamard_amax``.
     HADAMARD_MISSING: ClassVar[float] = -1.0
+    #: Serialized stand-in for untuned ``blocks``.
+    BLOCKS_MISSING: ClassVar[int] = -1
+
+    def block_tuple(self) -> Optional[tuple]:
+        """The autotuned blocks as a static (bm, bn, bk) int tuple for
+        the jitted kernels' static args — None when untuned.
+
+        Memoised on the instance: the leaf is immutable after tuning or
+        restore, and the engine resolves it on every conv2d dispatch —
+        without the memo each serving call would pay a device→host sync
+        per tuned layer. ``dataclasses.replace``/pytree unflatten build
+        fresh instances, so the memo can never go stale.
+        """
+        if self.blocks is None:
+            return None
+        bt = getattr(self, "_block_tuple", None)
+        if bt is None:
+            bt = tuple(int(b) for b in jax.device_get(self.blocks))
+            self._block_tuple = bt
+        return bt
 
     @property
     def calibrated(self) -> bool:
@@ -110,6 +139,13 @@ class PackedWinogradWeights:
             tree["hadamard_amax"] = (
                 self.hadamard_amax if self.hadamard_amax is not None
                 else jnp.full_like(self.in_scales, self.HADAMARD_MISSING))
+        # Always a leaf (sentinel when untuned): the checkpoint tree
+        # structure stays independent of per-layer autotune history, and
+        # a tuned engine's state restores into an untuned one.
+        tree["blocks"] = (jnp.asarray(self.blocks, jnp.int32)
+                         if self.blocks is not None
+                         else jnp.full((3,), self.BLOCKS_MISSING,
+                                       jnp.int32))
         return tree
 
     @classmethod
@@ -119,15 +155,21 @@ class PackedWinogradWeights:
             hs = jnp.asarray(hs)
             if float(jnp.max(hs)) < 0:      # the dropped-stat sentinel
                 hs = None
+        blocks = tree.get("blocks")
+        if blocks is not None:
+            blocks = jnp.asarray(blocks)
+            if int(jax.device_get(jnp.max(blocks))) < 0:    # untuned
+                blocks = None
         return cls(u_q=jnp.asarray(tree["u_q"]),
                    w_scales=jnp.asarray(tree["w_scales"]),
                    in_scales=jnp.asarray(tree["in_scales"]),
-                   hadamard_amax=hs)
+                   hadamard_amax=hs, blocks=blocks)
 
 
 jax.tree_util.register_pytree_node(
     PackedWinogradWeights,
-    lambda p: ((p.u_q, p.w_scales, p.in_scales, p.hadamard_amax), None),
+    lambda p: ((p.u_q, p.w_scales, p.in_scales, p.hadamard_amax,
+                p.blocks), None),
     lambda _, c: PackedWinogradWeights(*c),
 )
 

@@ -37,6 +37,7 @@ flex).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -102,6 +103,25 @@ class WinogradMatrices:
 
 
 def make_matrices(spec: WinogradSpec, points=None) -> WinogradMatrices:
+    """Exact-rational construction of the spec's transform matrices.
+
+    Cached per spec for the default point set: the Fraction arithmetic
+    costs ~ms per call and the serving path composes eagerly-dispatched
+    compile units (one-Xq contract, ``kernels.ops``), so it would
+    otherwise run on every conv call. The returned arrays are
+    treated as read-only constants everywhere.
+    """
+    if points is None:
+        return _make_matrices_default(spec)
+    return _build_matrices(spec, points)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_matrices_default(spec: WinogradSpec) -> WinogradMatrices:
+    return _build_matrices(spec, None)
+
+
+def _build_matrices(spec: WinogradSpec, points) -> WinogradMatrices:
     AT_f, G_f, BT_f = _tc.toom_cook_matrices(spec.m, spec.r, points=points)
     # base_change returns (P_coef, P_coef⁻¹); the conversion canonical→basis
     # is C = P_coef⁻¹ (see module docstring on the paper's orientation).
@@ -111,12 +131,16 @@ def make_matrices(spec: WinogradSpec, points=None) -> WinogradMatrices:
     BT = _tc.to_float(BT_f)
     C = _tc.to_float(Pinv_f)
     Cinv = _tc.to_float(P_f)
+    # Host numpy constants, deliberately NOT jnp: the result is cached
+    # and make_matrices may first be hit inside a jit trace, where a
+    # jnp dtype cast would capture (and leak) a tracer. Numpy constants
+    # embed into any consuming trace/kernel call as-is.
     d = spec.dtype
     return WinogradMatrices(
-        AT=jnp.asarray(AT, d), G=jnp.asarray(G, d), BT=jnp.asarray(BT, d),
-        C=jnp.asarray(C, d), Cinv=jnp.asarray(Cinv, d),
-        GP=jnp.asarray(C @ G, d), BPT=jnp.asarray(BT @ C.T, d),
-        APT=jnp.asarray(AT @ C.T, d), CinvT=jnp.asarray(Cinv.T, d),
+        AT=np.asarray(AT, d), G=np.asarray(G, d), BT=np.asarray(BT, d),
+        C=np.asarray(C, d), Cinv=np.asarray(Cinv, d),
+        GP=np.asarray(C @ G, d), BPT=np.asarray(BT @ C.T, d),
+        APT=np.asarray(AT @ C.T, d), CinvT=np.asarray(Cinv.T, d),
     )
 
 

@@ -50,9 +50,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantization import qmax
-from repro.kernels.wino_gemm import (DEFAULT_BLOCKS, _pad_to,
-                                     requant_plane)
-from repro.kernels.wino_transform import _sandwich_unrolled
+from repro.kernels.wino_gemm import (_pad_to, default_blocks,
+                                     requant_plane, validate_blocks)
+from repro.kernels.wino_transform import sandwich_stack
 
 __all__ = ["fused_gemm_output"]
 
@@ -89,10 +89,8 @@ def _fused_kernel(x_ref, w_ref, deq_ref, rq_ref, cinvt_ref, apt_ref,
                 cols.append(q * rq_ref[p, 0])
         h = jnp.stack(cols, -1).reshape(*cols[0].shape, n, n)
         if changes_base:
-            planes = _sandwich_unrolled(cinvt, cinvt, h, n, n)
-            h = jnp.stack([jnp.stack(row, -1) for row in planes], -2)
-        planes = _sandwich_unrolled(apt, apt, h, n, m)
-        out_ref[...] = jnp.stack([jnp.stack(row, -1) for row in planes], -2)
+            h = sandwich_stack(cinvt, cinvt, h, n, n)
+        out_ref[...] = sandwich_stack(apt, apt, h, n, m)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "requant_bits",
@@ -113,11 +111,14 @@ def fused_gemm_output(xq: jnp.ndarray, u_q: jnp.ndarray, deq: jnp.ndarray,
     ones), cinvt (n, n) / apt (m, n) transform operands
     → (T, Cout, m, m) fp32 spatial output tiles.
 
-    ``blocks`` (bm, bn, bk) overrides ``wino_gemm.DEFAULT_BLOCKS`` — the
-    per-shape tuning knob, reachable from ``ops.execute_int8`` and
-    ``ConvEngine(blocks=...)``; numerics are block-independent. At
-    F(6,3) the P=64-position scratch accumulator changes the optimal
-    split (the ROADMAP autotune item).
+    ``blocks`` (bm, bn, bk) overrides ``wino_gemm.default_blocks(P)`` —
+    the per-shape tuning knob, reachable from ``ops.execute_int8``,
+    ``ConvEngine(blocks=...)`` and the ``repro.conv.autotune``
+    per-(spec, shape) tuner; numerics are block-independent. At F(6,3)
+    the P=64-position scratch accumulator changes the optimum: the
+    MXU-aligned (128, 128) block would pin a 4 MiB int32 accumulator in
+    VMEM before counting operands, so ``default_blocks`` halves bm/bk
+    there and the autotuner searches the rest.
 
     Shapes need not be block-aligned: T/Cin/Cout are zero-padded (exact
     in integer arithmetic; padded rows are cropped from the output).
@@ -129,7 +130,7 @@ def fused_gemm_output(xq: jnp.ndarray, u_q: jnp.ndarray, deq: jnp.ndarray,
     assert P == P2 and K == K2, (xq.shape, u_q.shape)
     n = int(round(P ** 0.5))
     assert n * n == P, P
-    bm, bn, bk = blocks or DEFAULT_BLOCKS
+    bm, bn, bk = validate_blocks(blocks) or default_blocks(P)
     bm, bn, bk = min(bm, T), min(bn, N), min(bk, K)
 
     xp = _pad_to(_pad_to(xq, 1, bm), 2, bk)

@@ -26,12 +26,22 @@ Scales: per-Winograd-position symmetric scales. Production serving uses
 *calibrated* scales passed by the caller; when omitted they are derived
 dynamically (an extra XLA reduction — fine for tests/benchmarks).
 
+One Xq everywhere: the int8 input transform + quantization is pinned
+into a single compile unit (``quantize_input``, dispatching the one
+module-level ``input_transform`` jit) that every serving mode calls —
+``execute_int8`` composes the jitted kernel units instead of wrapping
+them in a monolithic jit, and the sharded path quantizes the full tile
+tensor before sharding the int8 result. A rounding-boundary input value
+therefore quantizes identically in all modes (the cross-XLA-program
+drift fixed per docs/parity.md).
+
 Sharded serving (``execute_int8_sharded``): the fused pipeline is
 independent per tile row, so heavy-QPS batches scale past one chip by
-``shard_map``-ing the tile axis T across the mesh's data axis — each
-device runs the fused kernel on its slab against replicated packed
-weights; only the (T_local, Cout, m, m) spatial outputs are gathered.
-Bit-identical to single-device fused execution on any device count.
+``shard_map``-ing the tile axis T of the quantized ``Xq`` across the
+mesh's data axis — each device runs the fused kernel on its slab
+against replicated packed weights; only the (T_local, Cout, m, m)
+spatial outputs are gathered. Bit-identical to single-device fused
+execution on any device count.
 
 Prepare/execute split (the LANCE-style offline/online cut): call
 ``prepare_weights_int8`` once per model to get the per-position int8
@@ -56,12 +66,12 @@ from repro.core.winograd import (WinogradMatrices, WinogradSpec,
 from repro.kernels import ref as kref
 from repro.kernels.fused_serve import fused_gemm_output
 from repro.kernels.q8_matmul import q8_matmul
-from repro.kernels.wino_gemm import wino_gemm
+from repro.kernels.wino_gemm import validate_blocks, wino_gemm
 from repro.kernels.wino_transform import input_transform, output_transform
 
 __all__ = ["prepare_weights_int8", "input_abs_max", "scales_from_abs_max",
-           "winograd_conv2d_int8", "execute_int8", "execute_int8_sharded",
-           "q8_linear"]
+           "quantize_input", "winograd_conv2d_int8", "execute_int8",
+           "execute_int8_sharded", "q8_linear"]
 
 
 def _geometry(x_shape, m: int, r: int, padding: str):
@@ -200,8 +210,10 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
     float rounding, so the flag is a performance knob.
 
     ``blocks`` overrides the Pallas (bm, bn, bk) tile blocks for the GEMM
-    and fused kernels (``None`` → ``wino_gemm.DEFAULT_BLOCKS``) — the
-    per-shape tuning knob; numerics are block-independent.
+    and fused kernels (``None`` → ``wino_gemm.default_blocks`` for the
+    spec's P) — the per-shape tuning knob; numerics are
+    block-independent. See ``repro.conv.autotune`` for the offline
+    per-(spec, shape) search.
 
     ``interpret=True`` (default here) runs the kernel bodies on CPU; on a
     real TPU deployment pass ``interpret=False``.
@@ -222,9 +234,26 @@ def winograd_conv2d_int8(x: jnp.ndarray, w: Optional[jnp.ndarray],
                         fused=fused, blocks=blocks, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "geom", "interpret",
-                                             "hadamard_bits", "with_stats",
-                                             "fused", "blocks"))
+def quantize_input(tiles: jnp.ndarray, in_scales: jnp.ndarray, *,
+                   spec: WinogradSpec, interpret: bool) -> jnp.ndarray:
+    """THE int8 input transform + quantization compile unit.
+
+    Every serving mode — staged/fused ``execute_int8``, the standalone
+    kernel composition, and ``execute_int8_sharded`` — obtains its
+    quantized Winograd-domain input ``Xq`` by calling exactly this
+    function, which dispatches the one module-level
+    ``kernels.wino_transform.input_transform`` jit. That makes the Xq
+    bytes identical across modes by construction: a rounding-boundary
+    input value can no longer quantize differently because a mode folded
+    the transform into a differently-FMA-contracted XLA program (the
+    pre-fix failure documented in docs/parity.md).
+    """
+    mats = make_matrices(spec)
+    return input_transform(tiles, mats.CinvT, mats.BPT, in_scales,
+                           changes_base=spec.changes_base,
+                           interpret=interpret)
+
+
 def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
                  w_scales: jnp.ndarray, in_scales: jnp.ndarray,
                  h_amax: Optional[jnp.ndarray] = None, *,
@@ -235,6 +264,17 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
                  blocks: Optional[tuple] = None):
     """The serving hot path: consumes extracted tiles, prepared weights
     and static scales.
+
+    Deliberately NOT one monolithic jit: it composes the module-level
+    jitted units (``quantize_input`` → ``wino_gemm`` /
+    ``fused_gemm_output`` → ``output_transform``), so every serving mode
+    shares the same compiled programs — in particular the input
+    quantization (one Xq everywhere; docs/parity.md). The historical
+    monolithic-jit form compiled the input transform into its own larger
+    program, whose FMA contraction could flip an int8 input-quantization
+    decision on a rounding boundary against the standalone/sharded
+    compositions. Production serving wraps the whole forward in an outer
+    ``jax.jit`` anyway, which inlines these units into one program.
 
     With calibrated ``h_amax`` — the (n²,) per-position abs-max of the
     Hadamard products, recorded offline — the requant stage does no
@@ -253,14 +293,16 @@ def execute_int8(tiles: jnp.ndarray, u_q: jnp.ndarray,
     domain, fp32 agreement to rounding).
 
     ``blocks`` overrides the Pallas (bm, bn, bk) tile blocks of the GEMM
-    / fused kernel; ``None`` keeps ``wino_gemm.DEFAULT_BLOCKS``.
+    / fused kernel; ``None`` keeps ``wino_gemm.default_blocks`` for the
+    spec. Malformed overrides raise ``ValueError`` here, before any
+    kernel launch.
     """
     assert not (with_stats and hadamard_bits is None)
+    blocks = validate_blocks(blocks)    # also normalizes lists → tuple
     mats = make_matrices(spec)
     m = spec.m
 
-    Xq = input_transform(tiles, mats.CinvT, mats.BPT, in_scales,
-                         changes_base=spec.changes_base, interpret=interpret)
+    Xq = quantize_input(tiles, in_scales, spec=spec, interpret=interpret)
     deq = in_scales * w_scales                       # (P, 1)
 
     use_fused = (fused and not with_stats
@@ -336,22 +378,24 @@ def execute_int8_sharded(tiles: jnp.ndarray, u_q: jnp.ndarray,
     (T_local, Cout, m, m) spatial outputs are gathered for reassembly —
     the (P, T, Cout) Hadamard plane never crosses the interconnect.
 
-    Numerics: per-tile arithmetic is untouched (same kernels, same
-    operand order, the K grid is not split), so the sharded execution is
-    **integer-exact in the Hadamard domain and bit-identical at fp32
-    output** to the single-device fused kernel run on the full tile
-    tensor (``input_transform`` → ``fused_gemm_output``), on any device
-    count — asserted in ``tests/test_distributed.py``. Against the
-    monolithic ``execute_int8`` jit the usual cross-XLA-program caveat
-    applies (one-ULP fp32 deltas can flip an int8 rounding decision —
-    see docs/parity.md).
+    Numerics: the input quantization runs ONCE on the full tile tensor
+    through ``quantize_input`` — the same compile unit every other mode
+    dispatches — and only the resulting int8 ``Xq`` is sharded (slicing
+    integer data is exact), so "one Xq everywhere" holds by
+    construction. Per-tile arithmetic downstream is untouched (same
+    fused kernel, same operand order, the K grid is not split), so the
+    sharded execution is **integer-exact in the Hadamard domain and
+    bit-identical at fp32 output** to single-device fused execution —
+    both the standalone composition and ``execute_int8(fused=True)``,
+    which now share all compile units — on any device count; asserted in
+    ``tests/test_distributed.py``.
 
     Requires the fused path's conditions: the Hadamard stage off, or its
     statistics calibrated (``h_amax``) — the dynamic requant reduction
     spans the whole (T, Cout) plane, which per-device slabs cannot see
     without a cross-device collective on the hot path. ``T`` is
-    zero-padded up to the device count (exact: zero tiles produce zero
-    rows, cropped before reassembly).
+    zero-padded up to the device count (exact: zero int8 rows produce
+    zero GEMM rows, cropped before reassembly).
     """
     from repro.distributed.sharding import data_axis_extent
     if hadamard_bits is not None and h_amax is None:
@@ -360,6 +404,7 @@ def execute_int8_sharded(tiles: jnp.ndarray, u_q: jnp.ndarray,
             "(h_amax) when the 8/9-bit requant stage is on — the dynamic "
             "derivation reduces over the whole (T, Cout) plane, which "
             "per-device tile slabs cannot see")
+    blocks = validate_blocks(blocks)    # also normalizes lists → tuple
     deq = in_scales * w_scales
     if hadamard_bits is None:
         rq = jnp.ones_like(deq)
@@ -368,16 +413,19 @@ def execute_int8_sharded(tiles: jnp.ndarray, u_q: jnp.ndarray,
         # single-device fused and staged requantize onto one grid.
         rq = _hadamard_rq(h_amax, hadamard_bits)
 
+    # One Xq: quantize the FULL tile tensor in the shared compile unit,
+    # then shard the int8 result across the mesh.
+    Xq = quantize_input(tiles, in_scales, spec=spec, interpret=interpret)
+
     ndev = data_axis_extent(mesh, data_axis)
-    T = tiles.shape[0]
+    T = Xq.shape[1]
     pad = (-T) % ndev
     if pad:
-        tiles = jnp.pad(tiles, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        Xq = jnp.pad(Xq, ((0, 0), (0, pad), (0, 0)))
 
     da = tuple(data_axis) if isinstance(data_axis, list) else data_axis
-    fn = _sharded_executor(spec, mesh, hadamard_bits, interpret,
-                           None if blocks is None else tuple(blocks), da)
-    y = fn(tiles, u_q, deq, rq, in_scales)
+    fn = _sharded_executor(spec, mesh, hadamard_bits, interpret, blocks, da)
+    y = fn(Xq, u_q, deq, rq)
     return _reassemble(y[:T], geom, spec.m)
 
 
@@ -401,19 +449,19 @@ def _sharded_executor(spec: WinogradSpec, mesh, hadamard_bits, interpret,
     from jax.sharding import PartitionSpec as P
     mats = make_matrices(spec)
 
-    def _slab(tiles_l, u_q, deq, rq, in_scales):
-        xq = input_transform(tiles_l, mats.CinvT, mats.BPT, in_scales,
-                             changes_base=spec.changes_base,
-                             interpret=interpret)
-        return fused_gemm_output(xq, u_q, deq, rq, mats.CinvT, mats.APT,
+    def _slab(xq_l, u_q, deq, rq):
+        # Consumes a pre-quantized (P, T_local, Cin) int8 slab — the
+        # input transform runs once on the full tensor (one Xq
+        # everywhere), NOT per slab.
+        return fused_gemm_output(xq_l, u_q, deq, rq, mats.CinvT, mats.APT,
                                  m=spec.m, requant_bits=hadamard_bits,
                                  changes_base=spec.changes_base,
                                  blocks=blocks, interpret=interpret)
 
-    shard = P(data_axis)
+    shard = P(None, data_axis)          # Xq is (P, T, Cin): shard T
     return shard_map_compat(_slab, mesh,
-                            in_specs=(shard, P(), P(), P(), P()),
-                            out_specs=shard)
+                            in_specs=(shard, P(), P(), P()),
+                            out_specs=P(data_axis))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))

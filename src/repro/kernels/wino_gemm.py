@@ -32,16 +32,71 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.quantization import qmax
 
-__all__ = ["wino_gemm", "requant_plane", "DEFAULT_BLOCKS"]
+__all__ = ["wino_gemm", "requant_plane", "DEFAULT_BLOCKS",
+           "default_blocks", "validate_blocks", "MAX_BLOCK"]
 
 # MXU-aligned defaults: the systolic array is 128×128; K blocks of 256
 # halve the number of grid steps at an acceptable VMEM footprint
 # (128·256 + 256·128 int8 + 128·128 int32 ≈ 128 KiB per step).
 DEFAULT_BLOCKS = (128, 128, 256)
+
+#: Upper bound any single block dimension may take. Block dims beyond
+#: this are never profitable on TPU (VMEM is ~16 MiB) and usually
+#: indicate a units mistake (e.g. passing a channel count × dtype size);
+#: they now fail fast instead of reaching ``pallas_call``.
+MAX_BLOCK = 4096
+
+
+def default_blocks(P: int | None = None) -> tuple[int, int, int]:
+    """Default (bm, bn, bk) for the GEMM/fused kernels at ``P = n²``.
+
+    ``DEFAULT_BLOCKS`` is tuned for F(2,3)/F(4,3) (P ≤ 36). The fused
+    serving kernel keeps a (P, bm, bn) int32 accumulator in VMEM scratch
+    across the K grid, so its footprint scales with P: at F(6,3)'s
+    P = 64 the MXU-aligned (128, 128) block alone pins 4 MiB of scratch
+    before counting the int8 operand blocks — halving bm and bk keeps a
+    grid step near the F(4,3) footprint while bn stays lane-aligned.
+    Per-(spec, shape) winners beyond this heuristic come from
+    ``repro.conv.autotune``.
+    """
+    if P is not None and P >= 64:
+        return (64, 128, 128)
+    return DEFAULT_BLOCKS
+
+
+def validate_blocks(blocks) -> tuple[int, int, int] | None:
+    """Validate a user-supplied (bm, bn, bk) override; None passes through.
+
+    Raises ``ValueError`` on malformed shapes, non-integers,
+    non-positive entries, or absurd (> ``MAX_BLOCK``) entries — the
+    kernels min-clamp blocks *down* to the operand shape (legitimate:
+    one candidate covers every smaller shape) but must never silently
+    accept a meaningless split.
+    """
+    if blocks is None:
+        return None
+    try:
+        bl = tuple(blocks)
+    except TypeError:
+        raise ValueError(f"blocks must be a (bm, bn, bk) triple, got "
+                         f"{blocks!r}")
+    if len(bl) != 3:
+        raise ValueError(f"blocks must be a (bm, bn, bk) triple, got "
+                         f"{blocks!r}")
+    for b in bl:
+        if isinstance(b, bool) or not isinstance(b, (int, np.integer)):
+            raise ValueError(f"blocks entries must be ints, got {blocks!r}")
+        if b < 1:
+            raise ValueError(f"blocks entries must be >= 1, got {blocks!r}")
+        if b > MAX_BLOCK:
+            raise ValueError(f"blocks entries must be <= {MAX_BLOCK}, got "
+                             f"{blocks!r}")
+    return tuple(int(b) for b in bl)
 
 
 def requant_plane(acc: jnp.ndarray, deq: jnp.ndarray, rq: jnp.ndarray,
@@ -120,7 +175,7 @@ def wino_gemm(x: jnp.ndarray, w: jnp.ndarray,
     assert P == P2 and K == K2, (x.shape, w.shape)
     if requant_bits is not None and (deq is None or rq is None):
         raise ValueError("requant epilogue needs deq and rq scales")
-    bm, bn, bk = blocks or DEFAULT_BLOCKS
+    bm, bn, bk = validate_blocks(blocks) or default_blocks(P)
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
 
     xp = _pad_to(_pad_to(x, 1, bm), 2, bk)

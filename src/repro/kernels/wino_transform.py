@@ -31,7 +31,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["input_transform", "output_transform"]
+__all__ = ["input_transform", "output_transform", "sandwich_stack"]
+
+#: Largest tile-window size the unrolled scalar sandwich is used for.
+#: The unrolled form emits O(n_out²·n_in²) scalar multiply-adds — fine
+#: at F(2,3)/F(4,3) (n ≤ 6, ≤ 1296 terms) but at F(6,3)'s n = 8 the
+#: base-change sandwich alone is 4096 terms, which blows up XLA compile
+#: time (minutes in interpret mode) and is VPU-latency-bound on
+#: hardware. Larger windows route through two dot_generals instead
+#: (MXU work at sizes where the systolic array starts to pay).
+#: F(2,3)/F(4,3) keep the unrolled path — and their committed bitwise
+#: parity behavior — unchanged.
+_UNROLL_MAX_N = 6
 
 
 def _sandwich_unrolled(mat_l, mat_r_t, x, n_in, n_out):
@@ -53,24 +64,44 @@ def _sandwich_unrolled(mat_l, mat_r_t, x, n_in, n_out):
     return planes
 
 
+def _sandwich_dot(mat_l, mat_r_t, x):
+    """L · x · Rᵀ over the trailing two dims of x, as two dot_generals."""
+    t = jnp.einsum("aj,...jk->...ak", mat_l, x)
+    return jnp.einsum("bk,...ak->...ab", mat_r_t, t)
+
+
+def sandwich_stack(mat_l, mat_r_t, x, n_in: int, n_out: int):
+    """Transform sandwich → stacked (..., n_out, n_out) array.
+
+    THE shared sandwich of every transform kernel (input, output, fused
+    serving) — one strategy per window size, so the staged and fused
+    pipelines always run identical arithmetic. Small windows (n ≤ 6)
+    keep the unrolled scalar form; larger windows (F(6,3): n = 8) use
+    the dot_general form (see ``_UNROLL_MAX_N``).
+    """
+    if n_in <= _UNROLL_MAX_N:
+        planes = _sandwich_unrolled(mat_l, mat_r_t, x, n_in, n_out)
+        return jnp.stack([jnp.stack(row, -1) for row in planes], -2)
+    return _sandwich_dot(mat_l, mat_r_t, x)
+
+
 def _input_kernel(tiles_ref, cinvt_ref, bpt_ref, scale_ref, out_ref, *,
                   n: int, changes_base: bool):
     x = tiles_ref[...].astype(jnp.float32)          # (bt, bc, n, n)
     cinvt = cinvt_ref[...]
     bpt = bpt_ref[...]
     if changes_base:
-        planes = _sandwich_unrolled(cinvt, cinvt, x, n, n)
-        # stacking rows at -2 and cols at -1 already lands (bt, bc, n, n)
-        # in row-major tile order — verified exactly against
+        # stacking rows at -2 and cols at -1 lands (bt, bc, n, n) in
+        # row-major tile order — verified exactly against
         # ref.input_transform_fp for the base-change path.
-        x = jnp.stack([jnp.stack(row, -1) for row in planes], -2)
-    planes = _sandwich_unrolled(bpt, bpt, x, n, n)
+        x = sandwich_stack(cinvt, cinvt, x, n, n)
+    v = sandwich_stack(bpt, bpt, x, n, n)
     # quantize per position: scale_ref is (n*n, 1) in SMEM-like layout
     for a in range(n):
         for b in range(n):
             p = a * n + b
             s = scale_ref[p, 0]
-            q = jnp.clip(jnp.round(planes[a][b] / s), -127, 127)
+            q = jnp.clip(jnp.round(v[..., a, b] / s), -127, 127)
             out_ref[p, ...] = q.astype(jnp.int8)
 
 
@@ -84,11 +115,8 @@ def _output_kernel(h_ref, scale_ref, cinvt_ref, apt_ref, out_ref, *,
     cinvt = cinvt_ref[...]
     apt = apt_ref[...]
     if changes_base:
-        planes = _sandwich_unrolled(cinvt, cinvt, h, n, n)
-        h = jnp.stack([jnp.stack(row, -1) for row in planes], -2)
-    planes = _sandwich_unrolled(apt, apt, h, n, m)
-    y = jnp.stack([jnp.stack(row, -1) for row in planes], -2)  # (bt,bc,m,m)
-    out_ref[...] = y
+        h = sandwich_stack(cinvt, cinvt, h, n, n)
+    out_ref[...] = sandwich_stack(apt, apt, h, n, m)        # (bt,bc,m,m)
 
 
 def _pad_axis(x, axis, mult):

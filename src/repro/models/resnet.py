@@ -150,7 +150,9 @@ def _bn(x, p, st, training: bool, momentum: float):
 
 def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
                 fused: bool = True, interpret: bool = True,
-                mesh=None, blocks: Optional[tuple] = None) -> ConvEngine:
+                mesh=None, blocks: Optional[tuple] = None,
+                autotune: bool = False,
+                autotune_opts: Optional[dict] = None) -> ConvEngine:
     """Build the config's ConvEngine.
 
     ``backend`` overrides the eligible-conv backend (e.g.
@@ -159,7 +161,10 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
     staged int8 pipeline (bit-identical; for benchmarking the fusion
     win). ``mesh`` serves prepared+calibrated int8 layers sharded across
     the mesh's "data" axis (tile-slab parallelism — see
-    ``ConvEngine``); ``blocks`` overrides the Pallas GEMM tile blocks.
+    ``ConvEngine``); ``blocks`` manually overrides the Pallas GEMM tile
+    blocks; ``autotune=True`` instead searches the block split per
+    layer shape at calibration time and caches the winners in the
+    packed state (``repro.conv.autotune``).
     """
     if not cfg.use_winograd or cfg.wino is None:
         return ConvEngine(cfg.wino,
@@ -167,7 +172,8 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
     backend = backend or cfg.conv_backend or "winograd_fakequant"
     return ConvEngine(cfg.wino, ConvPolicy(backend=backend),
                       fused=fused, interpret=interpret, mesh=mesh,
-                      blocks=blocks)
+                      blocks=blocks, autotune=autotune,
+                      autotune_opts=autotune_opts)
 
 
 def conv_layers(params, cfg: ResNetConfig):

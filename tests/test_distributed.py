@@ -257,9 +257,12 @@ def test_sharded_export_restore_serve_under_mesh():
     """The full serving lifecycle under a mesh: calibrate+pack on one
     engine, checkpoint, restore into mesh-backed engines
     (``import_state`` replicates the packed state), and serve — sharded
-    outputs bitwise identical across 1/2/4-device meshes and matching
-    the single-device fused engine to quantization-noise level (the
-    cross-XLA-program rounding contract, docs/parity.md)."""
+    outputs BITWISE identical across 1/2/4-device meshes AND to the
+    single-device fused engine. The second equality is the one-Xq fix:
+    every mode now quantizes the input through the same compile unit
+    and dispatches the same kernel jits, so the old quantization-noise
+    allowance (a rounding-boundary input flipping across XLA programs,
+    docs/parity.md) tightened to the bitwise tier."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh
@@ -301,10 +304,68 @@ def test_sharded_export_restore_serve_under_mesh():
             ys[d] = np.asarray(eng.conv2d(x, None, layer="c"))
         assert np.array_equal(ys[1], ys[2]) and \\
             np.array_equal(ys[1], ys[4])
-        rel = float(np.sqrt(((ys[1] - y_fused) ** 2).mean())
-                    / np.sqrt((y_fused ** 2).mean()))
-        assert rel < 1e-2, rel          # quantization-noise level
-        print("OK", rel)
+        # the one-Xq tier: sharded == single-device fused, bitwise
+        assert np.array_equal(ys[1], y_fused)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_one_xq_across_modes_and_f63_sharded():
+    """The headline Xq fix, asserted across every serving mode — plus
+    the F(6,3) sharded case. ``execute_int8`` (staged AND fused), the
+    standalone kernel composition and ``execute_int8_sharded`` on a
+    2-device mesh all consume byte-identical Xq (one
+    ``quantize_input`` compile unit), and the fused/sharded/composition
+    outputs are bitwise equal — for F(4,3) and F(6,3) × canonical/
+    legendre with 9-bit Hadamard requant."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core.quantization import QuantConfig, qmax
+        from repro.core.winograd import WinogradSpec, make_matrices
+        from repro.kernels.fused_serve import fused_gemm_output
+        from repro.kernels.ops import (_extract, _geometry, _reassemble,
+                                       _tiles_abs_max, execute_int8,
+                                       execute_int8_sharded,
+                                       prepare_weights_int8,
+                                       quantize_input,
+                                       scales_from_abs_max)
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 4))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 6)) * 0.2
+        for m in (4, 6):
+            for base in ("canonical", "legendre"):
+                spec = WinogradSpec(m=m, r=3, base=base,
+                                    quant=QuantConfig(hadamard_bits=9))
+                mats = make_matrices(spec)
+                u_q, w_s = prepare_weights_int8(w, spec)
+                tiles = _extract(x, m, 3, spec.n, "same")
+                geom = _geometry(x.shape, m, 3, "same")
+                in_s = scales_from_abs_max(_tiles_abs_max(tiles, spec))
+                _, amax = execute_int8(
+                    tiles, u_q, w_s, in_s, spec=spec, geom=geom,
+                    hadamard_bits=9, interpret=True, with_stats=True)
+                h_amax = amax.reshape(-1, 1)
+                # the one compile unit every mode dispatches
+                Xq = quantize_input(tiles, in_s, spec=spec,
+                                    interpret=True)
+                deq = in_s * w_s
+                rq = jnp.maximum(h_amax, 1e-12) / qmax(9)
+                ref = np.asarray(_reassemble(fused_gemm_output(
+                    Xq, u_q, deq, rq, mats.CinvT, mats.APT, m=m,
+                    requant_bits=9, changes_base=spec.changes_base,
+                    interpret=True), geom, m))
+                y_fused = np.asarray(execute_int8(
+                    tiles, u_q, w_s, in_s, h_amax, spec=spec, geom=geom,
+                    hadamard_bits=9, interpret=True, fused=True))
+                assert np.array_equal(y_fused, ref), (m, base)
+                mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+                y_sh = np.asarray(execute_int8_sharded(
+                    tiles, u_q, w_s, in_s, h_amax, spec=spec, geom=geom,
+                    mesh=mesh, hadamard_bits=9, interpret=True))
+                assert np.array_equal(y_sh, ref), (m, base)
+        print("OK")
     """)
     assert "OK" in out
 
