@@ -13,7 +13,14 @@ each pipeline row is *normalized* by the dynamic-int8 row of the same
 shape (``engine_winograd_int8_<tag>``, emitted by both smoke and full
 runs): the gate then compares "pipeline time in units of dynamic time",
 which cancels machine speed while still catching real regressions in
-the fused/staged hot paths. ``--no-normalize`` compares raw µs.
+the fused/staged hot paths. A row fails only when BOTH views regress —
+the raw µs and the normalized time each exceeding the tolerance: the
+normalizer row is itself a measurement, and when it lands fast in one
+run a raw-faster-than-baseline row must not read as a "normalized
+regression" (observed: the dynamic row runs hotter inside the full
+sweep's bloated process than in a smoke run, skewing the ratio by
+>30% while every raw time improved). ``--no-normalize`` compares raw
+µs only.
 
 Sharded rows are excluded — they depend on the device topology of the
 run, not on the code. Autotune rows are excluded too (the tuner's own
@@ -87,13 +94,16 @@ def compare(new: dict, old: dict, tol: float, normalize: bool = True):
                     and new_rows[dyn]["us_per_call"] > 0:
                 scale = (old_rows[dyn]["us_per_call"]
                          / new_rows[dyn]["us_per_call"])
-        adj = t_new * scale
+        # A regression must show in BOTH views (see module docstring):
+        # raw µs guard against a noisy normalizer, normalized µs guard
+        # against a slower machine.
+        adj = min(t_new, t_new * scale)
         checked += 1
         if adj > t_old * (1.0 + tol):
             failures.append(
-                f"{name}: {t_new:.1f}us (norm {adj:.1f}us) vs committed "
-                f"{t_old:.1f}us — {adj / t_old - 1.0:+.0%} exceeds "
-                f"+{tol:.0%}")
+                f"{name}: {t_new:.1f}us (norm {t_new * scale:.1f}us) vs "
+                f"committed {t_old:.1f}us — {adj / t_old - 1.0:+.0%} "
+                f"exceeds +{tol:.0%} in both raw and normalized time")
     return checked, failures, fresh
 
 
