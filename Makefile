@@ -2,7 +2,8 @@
 
 PY ?= python
 
-.PHONY: verify quickstart bench-kernels bench-smoke serve-int8
+.PHONY: verify quickstart bench-kernels bench-smoke bench-serve-smoke \
+	serve-int8 serve-online
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -21,6 +22,21 @@ bench-smoke:
 	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench --smoke
 	PYTHONPATH=src:. $(PY) -m benchmarks.trend_check
 
+# Online-serving SLO benchmark (continuous batching under Poisson
+# load), then gates the serve_p50/p99 rows against the committed
+# BENCH_serve.json. Latency percentiles are queue measurements, noisier
+# than kernel wall rows — hence the wider tolerance.
+bench-serve-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.serve_bench --smoke
+	PYTHONPATH=src:. $(PY) -m benchmarks.trend_check \
+		--json BENCH_serve.json --tol 0.5
+
 serve-int8:
 	PYTHONPATH=src $(PY) -m repro.launch.infer_resnet --width 0.25 \
 		--batch 4 --calib-steps 2
+
+# Full online lifecycle demo: pack -> calibrate -> checkpoint -> serve
+# with continuous batching (repro.launch.serve).
+serve-online:
+	PYTHONPATH=src $(PY) -m repro.launch.serve --width 0.25 \
+		--buckets 1,4 --rate 4 --requests 24 --solo-requests 4

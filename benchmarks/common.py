@@ -11,6 +11,11 @@ import jax
 # re-exec helper lives with the mesh factories.
 from repro.launch.mesh import ensure_host_device_count as \
     ensure_host_devices
+# Latency statistics shared with the serving stack: one percentile
+# definition for BENCH rows and serving reports (implementation lives
+# in src/ so PYTHONPATH=src launchers can use it too).
+from repro.serving.metrics import (latency_histogram, p50, p99,  # noqa: F401
+                                   percentile)
 
 #: Rows recorded by ``emit`` since process start (the JSON payload).
 _ROWS: list[dict] = []

@@ -1,33 +1,41 @@
-"""CI gate on the serving-pipeline perf trajectory (BENCH_kernel.json).
+"""CI gate on the serving-perf trajectory (BENCH_kernel.json and
+BENCH_serve.json).
 
-``make bench-smoke`` re-measures the prepared fused/staged engine rows
-and this module compares them against the baseline committed at HEAD
-(``git show HEAD:BENCH_kernel.json``): any fused or staged pipeline row
+``make bench-smoke`` re-measures the prepared fused/staged engine rows,
+``make bench-serve-smoke`` re-measures the online-serving latency
+percentiles, and this module compares each fresh JSON against the
+baseline committed at HEAD (``git show HEAD:<json>``): any gated row
 more than ``--tol`` (default 20%) slower than its committed counterpart
 fails CI — closing the ROADMAP "BENCH trajectory" loop with an actual
 gate instead of an artifact upload.
 
+Two row families are gated, each with its own per-shape normalizer:
+
+* **pipeline rows** (``engine_winograd_int8_prepared_<fused|staged>_*``)
+  normalized by the dynamic-int8 row of the same shape;
+* **serving SLO rows** (``serve_<p50|p99>_*``, µs latency percentiles
+  from ``benchmarks.serve_bench``) normalized by the
+  serve-each-request-alone row of the same tag (``serve_solo_<tag>``) —
+  "p99 in units of a lone request's service time", which cancels
+  machine speed while still catching real regressions in coalescing,
+  padding or dispatch.
+
 Cross-machine noise: absolute interpret-mode wall-times differ between
-the machine that committed the baseline and the CI runner, so by default
-each pipeline row is *normalized* by the dynamic-int8 row of the same
-shape (``engine_winograd_int8_<tag>``, emitted by both smoke and full
-runs): the gate then compares "pipeline time in units of dynamic time",
-which cancels machine speed while still catching real regressions in
-the fused/staged hot paths. A row fails only when BOTH views regress —
-the raw µs and the normalized time each exceeding the tolerance: the
-normalizer row is itself a measurement, and when it lands fast in one
-run a raw-faster-than-baseline row must not read as a "normalized
-regression" (observed: the dynamic row runs hotter inside the full
-sweep's bloated process than in a smoke run, skewing the ratio by
->30% while every raw time improved). ``--no-normalize`` compares raw
-µs only.
+the machine that committed the baseline and the CI runner, so a row
+fails only when BOTH views regress — the raw µs and the normalized time
+each exceeding the tolerance: the normalizer row is itself a
+measurement, and when it lands fast in one run a raw-faster-than-
+baseline row must not read as a "normalized regression" (observed: the
+dynamic row runs hotter inside the full sweep's bloated process than in
+a smoke run, skewing the ratio by >30% while every raw time improved).
+``--no-normalize`` compares raw µs only.
 
 Sharded rows are excluded — they depend on the device topology of the
 run, not on the code. Autotune rows are excluded too (the tuner's own
-argmin is the guarantee; gating them would gate timer noise). Pipeline
-rows *added* by a PR (a new spec such as F(6,3), a new shape) have no
-committed counterpart yet: they are reported but not gated until a
-baseline containing them is committed.
+argmin is the guarantee; gating them would gate timer noise). Gated
+rows *added* by a PR (a new spec such as F(6,3), a new shape, a new
+serving rate) have no committed counterpart yet: they are reported but
+not gated until a baseline containing them is committed.
 
 Exit codes: 0 pass (or no comparable baseline — first run on a branch
 that never committed the JSON), 1 regression.
@@ -40,12 +48,21 @@ import re
 import subprocess
 import sys
 
-#: The gated rows: the prepared fused/staged serving pipelines.
+#: The prepared fused/staged serving pipelines, normalized per shape by
+#: the dynamic-scale int8 row of the same engine + shape.
 PIPELINE_ROW = re.compile(
     r"^engine_winograd_int8_prepared_(fused|staged)_(?P<tag>.+)$")
-
-#: Per-shape normalizer row (dynamic-scale int8, same engine, same shape).
 DYNAMIC_ROW = "engine_winograd_int8_{tag}"
+
+#: Online-serving latency percentiles (benchmarks.serve_bench),
+#: normalized per tag by the serve-each-request-alone latency row.
+SERVE_ROW = re.compile(r"^serve_(p50|p99)_(?P<load>[^_]+)_(?P<tag>.+)$")
+SOLO_ROW = "serve_solo_{tag}"
+
+#: (row pattern, normalizer-name template formatted with the match's
+#: named groups). All gated the same way: us_per_call, lower is better,
+#: fail only when raw AND normalized both regress.
+GATES = ((PIPELINE_ROW, DYNAMIC_ROW), (SERVE_ROW, SOLO_ROW))
 
 
 def load_committed(ref: str):
@@ -67,33 +84,40 @@ def _rows(doc: dict) -> dict:
     return {r["name"]: r for r in doc.get("rows", [])}
 
 
+def _gate_for(name: str):
+    """(match, normalizer row name) for a gated row, else (None, None)."""
+    for pattern, norm_tmpl in GATES:
+        m = pattern.match(name)
+        if m:
+            return m, norm_tmpl.format(**m.groupdict())
+    return None, None
+
+
 def compare(new: dict, old: dict, tol: float, normalize: bool = True):
     """(checked, failures, fresh): failures are human-readable row
-    reports; ``fresh`` lists pipeline rows with no committed baseline.
+    reports; ``fresh`` lists gated rows with no committed baseline.
 
     Only rows present in BOTH the fresh run and the committed baseline
-    are gated — a PR that *adds* pipeline rows (a new spec like F(6,3),
-    a new shape) must not fail CI for having nothing to compare its new
-    rows against. They are reported, and start being gated on the next
-    commit that includes them in BENCH_kernel.json.
+    are gated — a PR that *adds* gated rows (a new spec like F(6,3), a
+    new shape, a new serving rate) must not fail CI for having nothing
+    to compare its new rows against. They are reported, and start being
+    gated on the next commit that includes them in the baseline JSON.
     """
     new_rows, old_rows = _rows(new), _rows(old)
     checked, failures, fresh = 0, [], []
     for name, row in new_rows.items():
-        match = PIPELINE_ROW.match(name)
-        if not match:
+        match, norm_name = _gate_for(name)
+        if match is None:
             continue
         if name not in old_rows:
             fresh.append(name)
             continue
         t_new, t_old = row["us_per_call"], old_rows[name]["us_per_call"]
         scale = 1.0
-        if normalize:
-            dyn = DYNAMIC_ROW.format(tag=match.group("tag"))
-            if dyn in new_rows and dyn in old_rows \
-                    and new_rows[dyn]["us_per_call"] > 0:
-                scale = (old_rows[dyn]["us_per_call"]
-                         / new_rows[dyn]["us_per_call"])
+        if normalize and norm_name in new_rows and norm_name in old_rows \
+                and new_rows[norm_name]["us_per_call"] > 0:
+            scale = (old_rows[norm_name]["us_per_call"]
+                     / new_rows[norm_name]["us_per_call"])
         # A regression must show in BOTH views (see module docstring):
         # raw µs guard against a noisy normalizer, normalized µs guard
         # against a slower machine.
@@ -111,14 +135,19 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_kernel.json",
                     help="freshly-written benchmark JSON to gate")
-    ap.add_argument("--ref", default="HEAD:BENCH_kernel.json",
-                    help="git object holding the committed baseline")
+    ap.add_argument("--ref", default=None,
+                    help="git object holding the committed baseline "
+                         "(default: HEAD:<--json path>)")
     ap.add_argument("--tol", type=float, default=0.20,
-                    help="allowed fractional wall-time regression")
+                    help="allowed fractional regression (serving "
+                         "percentile rows are queue measurements — "
+                         "pass a wider --tol for BENCH_serve.json, as "
+                         "make bench-serve-smoke does)")
     ap.add_argument("--no-normalize", action="store_true",
-                    help="compare raw us instead of dynamic-row-"
+                    help="compare raw us instead of per-shape-"
                          "normalized times")
     args = ap.parse_args(argv)
+    ref = args.ref if args.ref is not None else f"HEAD:{args.json}"
 
     try:
         with open(args.json) as f:
@@ -127,27 +156,27 @@ def main(argv=None) -> int:
         print(f"trend_check: cannot read {args.json}: {e}",
               file=sys.stderr)
         return 1
-    old = load_committed(args.ref)
+    old = load_committed(ref)
     if old is None:
-        print(f"trend_check: no committed baseline at {args.ref}; "
+        print(f"trend_check: no committed baseline at {ref}; "
               "skipping (first run?)")
         return 0
 
     checked, failures, fresh = compare(new, old, args.tol,
                                        normalize=not args.no_normalize)
     if fresh:
-        print(f"trend_check: {len(fresh)} new pipeline row(s) without a "
+        print(f"trend_check: {len(fresh)} new gated row(s) without a "
               f"committed baseline — not gated: {', '.join(sorted(fresh))}")
     if checked == 0:
-        print("trend_check: no comparable fused/staged rows between the "
+        print("trend_check: no comparable gated rows between the "
               "fresh run and the committed baseline; skipping")
         return 0
     for f in failures:
         print(f"trend_check: REGRESSION {f}", file=sys.stderr)
-    print(f"trend_check: {checked} pipeline rows vs {args.ref}, "
+    print(f"trend_check: {checked} gated rows vs {ref}, "
           f"{len(failures)} regression(s), tol +{args.tol:.0%}"
           + ("" if args.no_normalize else
-             " (normalized by the dynamic-int8 row per shape)"))
+             " (normalized per shape/tag)"))
     return 1 if failures else 0
 
 

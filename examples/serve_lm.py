@@ -1,24 +1,85 @@
-"""Batched serving demo: prefill a prompt batch, then decode with the
+"""Batched LM serving demo: prefill a prompt batch, then decode with the
 per-family O(1)/KV caches (the same steps the multi-pod dry-run lowers).
 
     PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6-7b]
+
+This demo owns the offline prefill→decode loop outright;
+``repro.launch.serve`` is the *online* front-end (continuous batching
+over the int8 conv engine) and no longer covers LM decode.
 """
 import argparse
+import dataclasses
+import time
 
-from repro.launch import serve as serve_launcher
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, tiny_variant
+from repro.configs.base import RunConfig
+from repro.data.pipeline import batch_at
+from repro.launch.mesh import make_mesh_for
+from repro.launch.steps import make_serve_setup
+from repro.models import registry
+from repro.models.param import init_params
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-len", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
-    args = ap.parse_args()
-    serve_launcher.main(["--arch", args.arch, "--tiny",
-                         "--prompt-len", str(args.prompt_len),
-                         "--decode-len", str(args.decode_len),
-                         "--batch", str(args.batch)])
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = tiny_variant(ARCHS[args.arch])
+    if cfg.is_encoder:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+    model = registry.get_model(cfg)
+    total = args.prompt_len + args.decode_len
+    run = RunConfig(model=cfg, seq_len=total, global_batch=args.batch)
+    mesh = make_mesh_for(len(jax.devices()), args.model_parallel)
+    multi_pod = "pod" in mesh.axis_names
+
+    with mesh:
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        # Prefill on the prompt prefix.
+        prefill_run = dataclasses.replace(run, seq_len=args.prompt_len)
+        psetup = make_serve_setup(prefill_run, mesh, multi_pod, "prefill")
+        batch = batch_at(cfg, args.prompt_len, args.batch, 0)
+        prompt_inputs = {k: v for k, v in batch.items() if k != "labels"}
+        t0 = time.time()
+        cache_p, logits = psetup.step_fn(params, prompt_inputs)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+        # Grow the cache to full length (prefill cache covers prompt_len).
+        full_cache = jax.eval_shape(lambda: model.init_cache(
+            cfg, args.batch, total))
+
+        def grow(small, full):
+            pad = [(0, f - s) for s, f in zip(small.shape, full.shape)]
+            return jnp.pad(small, pad)
+
+        cache = jax.tree.map(grow, cache_p, full_cache)
+
+        dsetup = make_serve_setup(run, mesh, multi_pod, "decode")
+        tokens = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out_tokens = [tokens]
+        t0 = time.time()
+        for i in range(args.decode_len):
+            pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
+            logits, cache = dsetup.step_fn(params, cache, tokens, pos)
+            tokens = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            out_tokens.append(tokens)
+        jax.block_until_ready(tokens)
+        t_decode = time.time() - t0
+        toks = jnp.concatenate(out_tokens, axis=1)
+        print(f"[serve-lm] {cfg.name}: prefill {args.prompt_len} tok × "
+              f"{args.batch} seqs in {t_prefill:.2f}s; "
+              f"decode {args.decode_len} steps in {t_decode:.2f}s "
+              f"({args.decode_len * args.batch / max(t_decode, 1e-9):.1f}"
+              " tok/s)")
+        print("[serve-lm] sample continuation:", toks[0, :16].tolist())
 
 
 if __name__ == "__main__":

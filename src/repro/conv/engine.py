@@ -92,6 +92,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Iterable, Optional
 
 import jax
@@ -224,6 +225,47 @@ class ConvEngine:
         # symmetric quantizer absorbs it into w_scales), so both leaves
         # are part of the fingerprint.
         self._calib_uq: dict[str, tuple] = {}
+        # The serving callable warmup() defaults to — set by
+        # model-level factories (e.g. resnet.make_engine(warmup=...)).
+        self.serve_fn = None
+
+    # -- warmup -------------------------------------------------------------
+
+    def warmup(self, geometries: Iterable[tuple],
+               forward=None) -> dict[tuple, float]:
+        """Jit-compile and execute every registered serving geometry once.
+
+        ``geometries``: input shapes (e.g. ``(batch, H, W, Cin)``) the
+        online loop will dispatch — one XLA program compiles per shape,
+        so running each through ``forward`` here (``block_until_ready``)
+        moves the whole compile storm to startup: the first request of
+        any registered geometry then hits a warm cache, and serving
+        performs **zero recompiles** (the loop's
+        ``compiles_after_warmup`` instrumentation asserts it).
+
+        ``forward``: the serving callable (typically the outer
+        ``jax.jit`` of the model forward closed over this engine);
+        defaults to ``self.serve_fn``. Warm up *after* the engine holds
+        its final serving state (prepare/import_state) — compiling an
+        unprepared engine caches the dynamic-fallback programs instead.
+
+        Returns {shape: seconds} compile+execute wall per geometry.
+        """
+        forward = forward if forward is not None else self.serve_fn
+        if forward is None:
+            raise ValueError("warmup needs a serving callable: pass "
+                             "forward= or set engine.serve_fn")
+        times = {}
+        for g in geometries:
+            g = tuple(int(d) for d in g)
+            t0 = time.perf_counter()
+            # device_put, matching the serving loop's dispatch: a
+            # committed array keys a different jit-cache entry than an
+            # uncommitted one, and warmup must build the hot path's.
+            x = jax.device_put(jnp.zeros(g, jnp.float32))
+            jax.block_until_ready(forward(x))
+            times[g] = time.perf_counter() - t0
+        return times
 
     # -- dispatch -----------------------------------------------------------
 

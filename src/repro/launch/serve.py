@@ -1,90 +1,212 @@
-"""Serving launcher: batched prefill → decode loop.
+"""Online int8 serving launcher: calibrate → pack → checkpoint → serve
+under continuous batching.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --tiny \
-        --prompt-len 64 --decode-len 32 --batch 4
+    PYTHONPATH=src python -m repro.launch.serve \
+        --width 0.25 --buckets 1,2,4,8 --rate 8 --requests 64
 
-Runs the same prefill/decode steps the dry-run lowers at production
-scale; here they execute for real on host devices with a request batch
-from the synthetic pipeline, reporting decode tokens/s.
+The request-level production lifecycle for the paper's model on the
+Pallas int8 kernels (the offline stages are identical to
+``repro.launch.infer_resnet``; this launcher is what sits *in front* of
+them when traffic is ragged single-image requests instead of fixed
+offline batches):
+
+1. **pack / calibrate / checkpoint** — exactly the offline flow of
+   PRs 1–5: transform weights once, calibrate per-position scales (and
+   optionally autotune the Pallas block splits), serialize the packed
+   state through ``repro.checkpoint``.
+2. **restore + warmup** — a fresh engine (optionally mesh-sharded via
+   ``--mesh-devices``) imports the checkpoint, then pre-compiles every
+   registered serving geometry (``ConvEngine.warmup`` over the bucket
+   set) so no request ever waits on XLA.
+3. **serve** — ``repro.serving.ServingLoop`` coalesces Poisson arrivals
+   into dynamic batches, pads them into the pre-compiled buckets, and
+   double-buffers dispatch; the closed-loop Poisson generator
+   (``repro.serving.loadgen``) drives it and reports p50/p99 latency,
+   throughput, batch/padding statistics, and the compile count after
+   warmup (asserted zero).
+
+A serve-each-request-alone baseline runs first so the continuous-
+batching win is printed next to it.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
+import sys
+
+
+def _maybe_fork_host_devices(argv):
+    """Re-exec with XLA_FLAGS when --host-devices is asked for — before
+    the jax backend initializes (see ``repro.launch.mesh``)."""
+    from repro.launch.mesh import ensure_host_device_count
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--host-devices", type=int, default=0)
+    ns, _ = ap.parse_known_args(argv)
+    ensure_host_device_count(ns.host_devices, "repro.launch.serve", argv)
+
+
+if __name__ == "__main__":          # before jax backend init
+    _maybe_fork_host_devices(sys.argv[1:])
+
+import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import ARCHS, tiny_variant
-from repro.configs.base import RunConfig
-from repro.data.pipeline import batch_at
-from repro.launch.mesh import make_mesh_for
-from repro.launch.steps import make_serve_setup
-from repro.models import registry
+from repro.checkpoint.checkpoint import restore, save
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import WinogradSpec
+from repro.data.pipeline import cifar_batch_at
+from repro.models import resnet as RN
 from repro.models.param import init_params
+from repro.serving import (ServeConfig, ServingLoop, run_poisson_load,
+                           solo_latencies)
+
+IMAGE_SHAPE = (32, 32, 3)
+
+
+def build_serving_state(args, cfg):
+    """Offline stages: init → pack → calibrate → checkpoint. Returns the
+    (params, state, checkpoint tree) the online loop serves from."""
+    params = init_params(RN.param_specs(cfg), jax.random.PRNGKey(0))
+    state = init_params(RN.state_specs(cfg), jax.random.PRNGKey(1))
+    engine = RN.make_engine(cfg, backend="winograd_int8",
+                            autotune=args.autotune,
+                            autotune_opts=dict(iters=2, warmup=1,
+                                               max_candidates=6))
+    packed = engine.prepare(RN.conv_layers(params, cfg))
+    print(f"[pack] {len(packed)} conv layers → int8 Winograd domain")
+    with engine.calibration():
+        for step in range(args.calib_steps):
+            batch = cifar_batch_at(step, args.calib_batch)
+            RN.forward(params, state, batch["images"], cfg,
+                       training=False, engine=engine)
+    print(f"[calibrate] {args.calib_steps} batches × {args.calib_batch}")
+    if args.autotune:
+        tuned = sorted({p.block_tuple() for p in engine.packed.values()
+                        if p.blocks is not None})
+        print(f"[autotune] tuned block split(s): {tuned}")
+    path = save(args.ckpt_dir, 0, engine.export_state())
+    print(f"[checkpoint] packed+calibrated state → {path}")
+    return params, state, engine.state_template()
+
+
+def make_served_engine(args, cfg, template):
+    """Online stage 2: restore the checkpoint into a fresh (optionally
+    mesh-backed) engine — packed weights, calibrated scales and tuned
+    blocks all come from the checkpoint, unchanged."""
+    mesh = None
+    if args.mesh_devices > 0:
+        from jax.sharding import Mesh
+        ndev = len(jax.devices())
+        if args.mesh_devices > ndev:
+            print(f"[warn] --mesh-devices {args.mesh_devices} > visible "
+                  f"devices {ndev}; using {ndev} (pass --host-devices to "
+                  "split the host CPU)")
+        d = min(args.mesh_devices, ndev)
+        mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+        print(f"[mesh] serving across {d} device(s), tile-axis shard_map")
+    engine = RN.make_engine(cfg, backend="winograd_int8", mesh=mesh)
+    tree, _ = restore(args.ckpt_dir, template)
+    engine.import_state(tree)
+    return engine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--decode-len", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--base", default="legendre",
+                    choices=["canonical", "legendre", "chebyshev"])
+    ap.add_argument("--buckets", default="1,2,4,8",
+                    help="comma-separated serving batch geometries; "
+                         "every dynamic batch is padded up to one of "
+                         "these pre-compiled shapes")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="partial-batch flush deadline: a lone request "
+                         "never waits longer than this for companions")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--solo-requests", type=int, default=8,
+                    help="requests for the serve-each-alone baseline")
+    ap.add_argument("--calib-steps", type=int, default=2)
+    ap.add_argument("--calib-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/resnet_serve_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune Pallas block splits at calibration; the "
+                         "winners ride the checkpoint into serving")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="serve through a data-axis mesh of N devices "
+                         "(0 = single device)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="split the host CPU into N XLA devices "
+                         "(re-execs with XLA_FLAGS; for --mesh-devices)")
     args = ap.parse_args(argv)
+    if args.calib_steps < 1:
+        ap.error("--calib-steps must be >= 1")
+    buckets = tuple(int(b) for b in args.buckets.split(","))
 
-    cfg = ARCHS[args.arch]
-    if args.tiny:
-        cfg = tiny_variant(cfg)
-    if cfg.is_encoder:
-        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
-    model = registry.get_model(cfg)
-    total = args.prompt_len + args.decode_len
-    run = RunConfig(model=cfg, seq_len=total, global_batch=args.batch)
-    mesh = make_mesh_for(len(jax.devices()), args.model_parallel)
-    multi_pod = "pod" in mesh.axis_names
+    cfg = RN.ResNetConfig(
+        width_mult=args.width,
+        wino=WinogradSpec(m=4, r=3, base=args.base,
+                          quant=QuantConfig(hadamard_bits=9)))
 
-    with mesh:
-        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
-        # Prefill on the prompt prefix.
-        prefill_run = dataclasses.replace(run, seq_len=args.prompt_len)
-        psetup = make_serve_setup(prefill_run, mesh, multi_pod, "prefill")
-        batch = batch_at(cfg, args.prompt_len, args.batch, 0)
-        prompt_inputs = {k: v for k, v in batch.items() if k != "labels"}
-        t0 = time.time()
-        cache_p, logits = psetup.step_fn(params, prompt_inputs)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
-        # Grow the cache to full length (prefill cache covers prompt_len).
-        full_cache = jax.eval_shape(lambda: model.init_cache(
-            cfg, args.batch, total))
+    # Offline: pack → calibrate → checkpoint (stage 1).
+    params, state, template = build_serving_state(args, cfg)
 
-        def grow(small, full):
-            pad = [(0, f - s) for s, f in zip(small.shape, full.shape)]
-            return jnp.pad(small, pad)
+    # Online: restore → warmup → continuous batching (stages 2–3).
+    engine = make_served_engine(args, cfg, template)
+    engine.serve_fn = RN.serving_forward(params, state, cfg, engine)
+    loop = ServingLoop(engine.serve_fn, IMAGE_SHAPE,
+                       ServeConfig(buckets=buckets,
+                                   max_wait_ms=args.max_wait_ms),
+                       engine=engine)
+    loop.start()                       # pre-compiles every bucket geometry
+    for g, secs in loop.warmup_times.items():
+        print(f"[warmup] geometry {g}: {secs:.1f}s compile+execute")
 
-        cache = jax.tree.map(grow, cache_p, full_cache)
+    # Serve-each-request-alone baselines (same compiled programs): the
+    # provisioned largest-bucket geometry — what a single-geometry
+    # deployment pays per lone request, the throughput comparison
+    # target — and the smallest-bucket latency floor.
+    imgs = [np.asarray(cifar_batch_at(100 + i, 1,
+                                      seed=args.seed)["images"][0])
+            for i in range(max(args.solo_requests, 1))]
+    solo = solo_latencies(engine.serve_fn, imgs, bucket=buckets[-1])
+    solo_ms = 1e3 * sum(solo) / len(solo)
+    floor = solo_latencies(engine.serve_fn, imgs, bucket=buckets[0])
+    floor_ms = 1e3 * sum(floor) / len(floor)
+    print(f"[solo] serve-each-alone through bucket {buckets[-1]}: mean "
+          f"{solo_ms:.0f}ms/request ({1e3 / solo_ms:.2f} req/s); "
+          f"latency floor (bucket {buckets[0]}): {floor_ms:.0f}ms")
 
-        dsetup = make_serve_setup(run, mesh, multi_pod, "decode")
-        tokens = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        out_tokens = [tokens]
-        t0 = time.time()
-        for i in range(args.decode_len):
-            pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
-            logits, cache = dsetup.step_fn(params, cache, tokens, pos)
-            tokens = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-            out_tokens.append(tokens)
-        jax.block_until_ready(tokens)
-        t_decode = time.time() - t0
-        toks = jnp.concatenate(out_tokens, axis=1)
-        print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok × "
-              f"{args.batch} seqs in {t_prefill:.2f}s; "
-              f"decode {args.decode_len} steps in {t_decode:.2f}s "
-              f"({args.decode_len * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
-        print("[serve] sample continuation:", toks[0, :16].tolist())
+    # Poisson load through the continuous-batching loop.
+    def make_request(i):
+        return np.asarray(cifar_batch_at(1000 + i, 1,
+                                         seed=args.seed)["images"][0])
+
+    report = run_poisson_load(loop, rate_rps=args.rate,
+                              n_requests=args.requests,
+                              make_request=make_request, seed=args.seed)
+    print("[serve] " + report.describe())
+    edges, counts = _histogram_ms(report.latencies_s)
+    print("[serve] latency histogram (ms): "
+          + " ".join(f"{e:.0f}:{c}" for e, c in zip(edges, counts)))
+    speedup = report.throughput_rps * solo_ms / 1e3
+    print(f"[serve] continuous batching vs serve-alone "
+          f"(bucket-{buckets[-1]} geometry): {speedup:.2f}× throughput "
+          f"at p50 {report.p50_ms():.0f}ms / p99 {report.p99_ms():.0f}ms")
+    assert report.compiles in (0, None), \
+        (f"{report.compiles} XLA programs compiled on the hot path — "
+         "every serving geometry must be pre-compiled at warmup")
+    loop.shutdown(drain=True)
+    print("[serve] drained and shut down")
+
+
+def _histogram_ms(latencies_s, bins: int = 8):
+    from repro.serving import latency_histogram
+    edges, counts = latency_histogram([s * 1e3 for s in latencies_s],
+                                      bins=bins)
+    return edges[:-1], counts
 
 
 if __name__ == "__main__":

@@ -27,7 +27,8 @@ from repro.core.winograd import WinogradSpec, flex_init
 from repro.models.param import ParamSpec
 
 __all__ = ["ResNetConfig", "param_specs", "state_specs", "forward",
-           "loss_fn", "make_engine", "conv_layers", "NUM_CLASSES"]
+           "loss_fn", "make_engine", "conv_layers", "serving_forward",
+           "NUM_CLASSES"]
 
 NUM_CLASSES = 10
 _STAGES = (2, 2, 2, 2)          # ResNet18 basic blocks per stage
@@ -152,7 +153,8 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
                 fused: bool = True, interpret: bool = True,
                 mesh=None, blocks: Optional[tuple] = None,
                 autotune: bool = False,
-                autotune_opts: Optional[dict] = None) -> ConvEngine:
+                autotune_opts: Optional[dict] = None,
+                warmup: Optional[tuple] = None) -> ConvEngine:
     """Build the config's ConvEngine.
 
     ``backend`` overrides the eligible-conv backend (e.g.
@@ -165,15 +167,40 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
     blocks; ``autotune=True`` instead searches the block split per
     layer shape at calibration time and caches the winners in the
     packed state (``repro.conv.autotune``).
+
+    ``warmup=(params, state, geometries)`` additionally builds the
+    jitted serving forward (``serving_forward``), stores it on the
+    engine as ``serve_fn``, and runs ``ConvEngine.warmup`` over the
+    given ``(batch, 32, 32, 3)`` geometries so the first request of any
+    registered serving shape is not a compile storm. Only meaningful
+    when the engine already holds its final serving state at build time
+    — a restore-from-checkpoint flow should instead call
+    ``engine.warmup(...)`` after ``import_state``.
     """
     if not cfg.use_winograd or cfg.wino is None:
-        return ConvEngine(cfg.wino,
-                          ConvPolicy(backend="direct", fallback="direct"))
-    backend = backend or cfg.conv_backend or "winograd_fakequant"
-    return ConvEngine(cfg.wino, ConvPolicy(backend=backend),
-                      fused=fused, interpret=interpret, mesh=mesh,
-                      blocks=blocks, autotune=autotune,
-                      autotune_opts=autotune_opts)
+        eng = ConvEngine(cfg.wino,
+                         ConvPolicy(backend="direct", fallback="direct"))
+    else:
+        backend = backend or cfg.conv_backend or "winograd_fakequant"
+        eng = ConvEngine(cfg.wino, ConvPolicy(backend=backend),
+                         fused=fused, interpret=interpret, mesh=mesh,
+                         blocks=blocks, autotune=autotune,
+                         autotune_opts=autotune_opts)
+    if warmup is not None:
+        params, state, geometries = warmup
+        eng.serve_fn = serving_forward(params, state, cfg, eng)
+        eng.warmup(geometries)
+    return eng
+
+
+def serving_forward(params, state, cfg: ResNetConfig, engine: ConvEngine):
+    """The jitted online-serving callable: images → logits, inference
+    mode, closed over one engine. Build it ONCE per engine and reuse —
+    each call to this factory is a fresh ``jax.jit`` with an empty
+    compile cache, so re-wrapping would re-compile (and break the
+    serving loop's zero-recompile accounting)."""
+    return jax.jit(lambda im: forward(params, state, im, cfg,
+                                      training=False, engine=engine)[0])
 
 
 def conv_layers(params, cfg: ResNetConfig):

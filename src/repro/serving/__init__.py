@@ -1,0 +1,30 @@
+"""Online serving front-end: continuous batching over the int8 conv
+engine's pre-compiled, shape-bucketed geometries.
+
+* ``buckets`` — the fixed serving geometries ragged traffic is padded
+  into (and the bitwise padded-parity contract).
+* ``loop`` — the request queue / coalescing / double-buffered dispatch
+  loop (``ServingLoop``), with compile-count instrumentation.
+* ``loadgen`` — deterministic Poisson load generation + latency reports.
+* ``metrics`` — p50/p99/histogram, shared with ``benchmarks.common``.
+
+Entry points: ``repro.launch.serve`` (the launcher) and
+``benchmarks.serve_bench`` (the SLO benchmark CI gates against).
+"""
+from repro.serving.buckets import (DEFAULT_BUCKETS, bucket_for, pad_batch,
+                                   serve_padded, slice_batch,
+                                   validate_buckets)
+from repro.serving.loadgen import (LoadReport, run_poisson_load,
+                                   solo_latencies)
+from repro.serving.loop import (BatchRecord, RequestRecord, ServeConfig,
+                                ServingLoop, jit_cache_size)
+from repro.serving.metrics import latency_histogram, p50, p99, percentile
+
+__all__ = [
+    "DEFAULT_BUCKETS", "bucket_for", "pad_batch", "slice_batch",
+    "serve_padded", "validate_buckets",
+    "ServeConfig", "ServingLoop", "RequestRecord", "BatchRecord",
+    "jit_cache_size",
+    "LoadReport", "run_poisson_load", "solo_latencies",
+    "percentile", "p50", "p99", "latency_histogram",
+]

@@ -1,0 +1,109 @@
+"""Shape bucketing for online serving: a small fixed set of batch
+geometries, each pre-compiled once, that ragged request traffic is
+padded into.
+
+Why buckets exist: XLA compiles one program per input shape. An online
+queue coalesces whatever arrived in the last couple of milliseconds, so
+the natural batch size is a different integer every dispatch — and a
+naive loop would recompile (tens of seconds in interpret mode, seconds
+on TPU) on the hot path for every new size, plus re-run the block
+autotuner's assumptions at geometries it never measured. Rounding every
+dynamic batch up to the nearest registered bucket keeps the number of
+live compiled programs equal to the number of buckets, all built at
+startup by ``ConvEngine.warmup``.
+
+Why padding is safe: with a prepared+calibrated int8 engine there are
+**no batch-wide reductions on the serving path** — quantization scales
+are calibrated constants, the Pallas kernels are independent per tile
+row, BN runs on running statistics and the head is a per-row matmul. A
+request's rows therefore depend only on that request's data, so a
+request served inside a zero-padded bucket is **bitwise identical** to
+the same request served alone (asserted across bucket boundaries in
+``tests/test_serving.py``). Dynamic-requant layers would break this
+(their abs-max spans the whole batch's Hadamard plane): serve only
+fully-calibrated state, which ``ConvEngine.export_state`` already
+enforces.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["DEFAULT_BUCKETS", "validate_buckets", "bucket_for",
+           "pad_batch", "slice_batch", "serve_padded", "device_put"]
+
+#: Powers of two up to the default max batch — small enough that warmup
+#: stays cheap, dense enough that padding waste is bounded by 2×.
+DEFAULT_BUCKETS = (1, 2, 4, 8)
+
+
+def validate_buckets(buckets: Sequence[int]) -> tuple[int, ...]:
+    """Normalize a bucket set: unique positive ints, ascending."""
+    if not buckets:
+        raise ValueError("at least one bucket size is required")
+    out = sorted({int(b) for b in buckets})
+    if out[0] < 1:
+        raise ValueError(f"bucket sizes must be >= 1, got {buckets}")
+    if any(int(b) != b for b in buckets):
+        raise ValueError(f"bucket sizes must be integers, got {buckets}")
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """The smallest registered bucket that holds ``n`` requests.
+
+    ``n`` above the largest bucket is an error — the queue caps
+    coalescing at ``max(buckets)``, so this is a caller bug, not a
+    traffic condition.
+    """
+    if n < 1:
+        raise ValueError(f"need at least one request, got {n}")
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"batch of {n} exceeds the largest bucket "
+                     f"{max(buckets)} — the queue must cap coalescing")
+
+
+def pad_batch(x: np.ndarray, bucket: int) -> np.ndarray:
+    """Zero-pad the leading (batch) axis of ``x`` up to ``bucket``."""
+    n = x.shape[0]
+    if n > bucket:
+        raise ValueError(f"batch {n} does not fit bucket {bucket}")
+    if n == bucket:
+        return x
+    pad = np.zeros((bucket - n, *x.shape[1:]), dtype=x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+def slice_batch(y, n: int):
+    """Drop the padded rows of a bucketed result: the first ``n`` rows
+    are the real requests (the padded-parity contract is that they are
+    bitwise what each request would produce alone)."""
+    return y[:n]
+
+
+def device_put(x):
+    """Async host→device transfer (identity without jax, for plain-numpy
+    forwards). Every serving-path call goes through here — a raw
+    ``np.ndarray`` argument keys a *different* jit-cache entry than a
+    transferred one, and warmup, the dispatch loop, and the solo
+    baseline must all hit the same pre-compiled programs."""
+    try:
+        import jax
+        return jax.device_put(x)
+    except ImportError:
+        return x
+
+
+def serve_padded(forward, x: np.ndarray, bucket: int):
+    """Run ``forward`` on ``x`` padded to ``bucket``; return the real rows.
+
+    The slicing helper behind the padded-parity guarantee: for any
+    ``0 < n <= bucket``, ``serve_padded(f, x[:n], bucket)[i]`` is bitwise
+    ``f(x[i:i+1])[0]`` on a calibrated serving path.
+    """
+    n = x.shape[0]
+    y = forward(device_put(pad_batch(x, bucket)))
+    return slice_batch(np.asarray(y), n)

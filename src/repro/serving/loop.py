@@ -1,0 +1,325 @@
+"""Continuous-batching serving loop: an online request queue over a
+pre-compiled, shape-bucketed forward.
+
+The structure (one dispatcher thread, depth-2 pipeline):
+
+    clients ──submit()──▶ FIFO queue ──coalesce──▶ bucket-pad ──▶
+        device_put + forward (async dispatch)  ──▶ pending ring ──▶
+        block_until_ready → slice rows → complete futures
+
+* **Coalescing** — the dispatcher takes the oldest waiting request and
+  keeps pulling until either ``max(buckets)`` requests are in hand or
+  ``max_wait_ms`` has passed since the batch opened. A lone request
+  therefore never waits longer than ``max_wait_ms`` (the partial-batch
+  flush), and a burst is capped at the largest bucket.
+* **Bucketing** — the coalesced batch is zero-padded up to the smallest
+  registered bucket (``repro.serving.buckets``), so every dispatch hits
+  a program compiled at startup: zero XLA recompiles on the hot path
+  (``compiles_after_warmup`` counts them via the jit cache).
+* **Double buffering** — dispatch is asynchronous (jax returns before
+  the device finishes), so the loop forms, transfers and dispatches
+  batch *k+1* while batch *k* computes, and only then blocks on *k*.
+  When the queue goes idle the pending batch is delivered immediately
+  instead of waiting for a successor.
+* **Ordering** — a single FIFO dispatcher forms and delivers batches in
+  arrival order, so completion is in submission order globally, hence
+  per client.
+* **Drain** — ``shutdown(drain=True)`` stops intake, flushes the queue
+  and the pending ring, completes every future, and joins the thread.
+
+The loop is model-agnostic: ``forward`` is any callable mapping a
+``(B, *input_shape)`` array to per-row outputs (rows independent — the
+bucketed-padding parity contract). For the int8 conv stack, pass the
+jitted model forward and the ``ConvEngine`` so ``start()`` runs
+``engine.warmup`` over the bucket geometries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as _queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serving.buckets import (DEFAULT_BUCKETS, bucket_for, device_put,
+                                   pad_batch, validate_buckets)
+
+__all__ = ["ServeConfig", "ServingLoop", "RequestRecord", "BatchRecord",
+           "jit_cache_size"]
+
+
+def jit_cache_size(fn) -> Optional[int]:
+    """Number of programs a ``jax.jit`` callable has compiled, or None
+    for a non-jit callable. The compile-count instrumentation behind the
+    zero-recompiles-after-warmup contract."""
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of the online loop (see module docstring)."""
+    buckets: tuple = DEFAULT_BUCKETS
+    max_wait_ms: float = 2.0     # partial-batch flush deadline
+    pipeline_depth: int = 2      # in-flight batches (2 = double buffer)
+    poll_ms: float = 20.0        # idle wakeup for drain/shutdown checks
+
+    def __post_init__(self):
+        object.__setattr__(self, "buckets",
+                           validate_buckets(self.buckets))
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        if self.max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request accounting, appended at delivery time."""
+    rid: int
+    client: Optional[str]
+    t_submit: float
+    t_dispatch: float
+    t_done: float
+    batch_n: int                 # real requests in the dispatched batch
+    bucket: int                  # geometry it was padded into
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """Per-dispatch accounting (padding waste, service time)."""
+    n: int
+    bucket: int
+    t_open: float                # first request dequeued
+    t_dispatch: float
+    t_done: float
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    client: Optional[str]
+    x: np.ndarray
+    future: Future
+    t_submit: float
+
+
+@dataclasses.dataclass
+class _InFlight:
+    requests: list
+    y: object                    # dispatched (possibly async) result
+    t_open: float
+    t_dispatch: float
+    bucket: int
+
+
+_SENTINEL = object()
+
+
+class ServingLoop:
+    """Request-level continuous batching over a bucket-compiled forward.
+
+    ``forward``: callable ``(B, *input_shape) -> (B, ...)``;
+    ``input_shape``: the per-request shape (one request = one row);
+    ``engine``: optional ``ConvEngine`` — ``start()`` then warms the
+    bucket geometries through ``engine.warmup`` (otherwise the loop
+    warms ``forward`` directly).
+    """
+
+    def __init__(self, forward, input_shape: Sequence[int],
+                 config: ServeConfig = ServeConfig(), engine=None):
+        self.forward = forward
+        self.input_shape = tuple(int(d) for d in input_shape)
+        self.config = config
+        self.engine = engine
+        self.records: list[RequestRecord] = []
+        self.batches: list[BatchRecord] = []
+        self.warmup_times: dict = {}
+        self._queue: _queue.Queue = _queue.Queue()
+        self._pending: list[_InFlight] = []
+        self._thread: Optional[threading.Thread] = None
+        self._accepting = False
+        self._stopping = False
+        self._lock = threading.Lock()
+        self._next_rid = 0
+        self._outstanding = 0        # accepted but not yet delivered
+        self._warm_cache: Optional[int] = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self, warmup: bool = True) -> "ServingLoop":
+        """Warm every bucket geometry, then start the dispatcher."""
+        if self._thread is not None:
+            raise RuntimeError("loop already started")
+        if warmup:
+            geoms = [(b, *self.input_shape) for b in self.config.buckets]
+            if self.engine is not None:
+                self.warmup_times = self.engine.warmup(geoms, self.forward)
+            else:
+                for g in geoms:
+                    t0 = time.perf_counter()
+                    # Through device_put, same as _dispatch: a raw numpy
+                    # argument keys a different jit-cache entry, and
+                    # warmup must compile the hot path's entry.
+                    _block(self.forward(device_put(
+                        np.zeros(g, np.float32))))
+                    self.warmup_times[g] = time.perf_counter() - t0
+        self._warm_cache = jit_cache_size(self.forward)
+        self._accepting = True
+        self._thread = threading.Thread(target=self._run,
+                                        name="serving-loop", daemon=True)
+        self._thread.start()
+        return self
+
+    @property
+    def compiles_after_warmup(self) -> Optional[int]:
+        """XLA programs compiled since ``start()`` — 0 is the contract
+        (every serving geometry was pre-compiled); None when ``forward``
+        is not a jit callable."""
+        cur = jit_cache_size(self.forward)
+        if cur is None or self._warm_cache is None:
+            return None
+        return cur - self._warm_cache
+
+    def submit(self, x: np.ndarray, client: Optional[str] = None) -> Future:
+        """Enqueue one request (shape ``input_shape``); the Future
+        resolves to that request's output row(s), sliced out of whatever
+        bucket it was served in."""
+        x = np.asarray(x)
+        if x.shape != self.input_shape:
+            raise ValueError(f"request shape {x.shape} != registered "
+                             f"input shape {self.input_shape}")
+        if not self._accepting:
+            raise RuntimeError("serving loop is not accepting requests "
+                               "(not started, or shut down)")
+        fut: Future = Future()
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._outstanding += 1
+        self._queue.put(_Request(rid, client, x, fut, time.perf_counter()))
+        return fut
+
+    def drain(self, timeout: Optional[float] = None):
+        """Block until every accepted request has been delivered."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while self._outstanding > 0:
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("drain timed out")
+            time.sleep(self.config.poll_ms / 1e3)
+
+    def shutdown(self, drain: bool = True):
+        """Stop intake; flush (``drain=True``) or abandon the queue."""
+        self._accepting = False
+        if self._thread is None:
+            return
+        if not drain:
+            self._stopping = True
+        self._queue.put(_SENTINEL)
+        self._thread.join()
+        self._thread = None
+
+    # -- dispatcher ---------------------------------------------------------
+
+    def _run(self):
+        cfg = self.config
+        poll_s = cfg.poll_ms / 1e3
+        while True:
+            # Deliver when the pipeline is full — or when there is
+            # nothing new to coalesce, so an idle tail never waits for a
+            # successor batch before completing.
+            if self._pending and (len(self._pending) >= cfg.pipeline_depth
+                                  or self._queue.empty()):
+                self._deliver(self._pending.pop(0))
+                continue
+            try:
+                item = self._queue.get(timeout=poll_s)
+            except _queue.Empty:
+                if self._stopping and not self._pending:
+                    return
+                continue
+            if item is _SENTINEL:
+                self._stopping = True     # flush queue + pending, then exit
+                continue
+            self._dispatch(*self._coalesce(item))
+
+    def _coalesce(self, first: _Request):
+        """Pull requests until the largest bucket is full or the batch
+        deadline (``max_wait_ms`` after the batch opened) passes."""
+        cfg = self.config
+        t_open = time.perf_counter()
+        deadline = t_open + cfg.max_wait_ms / 1e3
+        batch = [first]
+        while len(batch) < cfg.max_batch:
+            remain = deadline - time.perf_counter()
+            if remain <= 0:
+                break
+            try:
+                item = self._queue.get(timeout=remain)
+            except _queue.Empty:
+                break
+            if item is _SENTINEL:
+                self._stopping = True
+                break
+            batch.append(item)
+        return batch, t_open
+
+    def _dispatch(self, batch: list, t_open: float):
+        bucket = bucket_for(len(batch), self.config.buckets)
+        x = pad_batch(np.stack([r.x for r in batch]), bucket)
+        x = device_put(x)                        # host→device, async
+        y = self.forward(x)                      # async dispatch
+        self._pending.append(_InFlight(batch, y, t_open,
+                                       time.perf_counter(), bucket))
+
+    def _deliver(self, inflight: _InFlight):
+        y = np.asarray(_block(inflight.y))
+        t_done = time.perf_counter()
+        n = len(inflight.requests)
+        self.batches.append(BatchRecord(n, inflight.bucket, inflight.t_open,
+                                        inflight.t_dispatch, t_done))
+        for i, req in enumerate(inflight.requests):
+            self.records.append(RequestRecord(
+                req.rid, req.client, req.t_submit, inflight.t_dispatch,
+                t_done, n, inflight.bucket))
+            req.future.set_result(y[i])
+        with self._lock:
+            self._outstanding -= n
+
+    # -- reporting ----------------------------------------------------------
+
+    def padding_fraction(self) -> float:
+        """Fraction of dispatched rows that were padding."""
+        rows = sum(b.bucket for b in self.batches)
+        real = sum(b.n for b in self.batches)
+        return 0.0 if rows == 0 else 1.0 - real / rows
+
+    def busy_fraction(self, wall_s: float) -> float:
+        """Approximate device-busy fraction over ``wall_s`` — batch
+        service intervals, serialized (delivery of batch k overlaps the
+        dispatch of k+1, so consecutive intervals are clipped)."""
+        busy, prev_done = 0.0, -float("inf")
+        for b in self.batches:
+            start = max(b.t_dispatch, prev_done)
+            busy += max(0.0, b.t_done - start)
+            prev_done = max(prev_done, b.t_done)
+        return 0.0 if wall_s <= 0 else min(1.0, busy / wall_s)
+
+
+def _block(y):
+    if hasattr(y, "block_until_ready"):
+        return y.block_until_ready()
+    return y

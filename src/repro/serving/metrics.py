@@ -1,0 +1,67 @@
+"""Latency statistics: percentiles and histograms.
+
+One implementation shared by the load generator, the serving launcher
+and the benchmark suite (``benchmarks.common`` re-exports these), so a
+"p99" in a BENCH row and a "p99" in the serving report are the same
+number by construction. Pure Python on sorted copies — sample counts
+here are thousands at most, and exact interpolation semantics matter
+more than speed (the unit tests pin them against numpy's default
+``linear`` method).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+__all__ = ["percentile", "p50", "p99", "latency_histogram"]
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """The q-th percentile (0..100) with linear interpolation between
+    order statistics — numpy's default method, so swapping ``np.percentile``
+    in or out of a report cannot move a gated number."""
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    s = sorted(float(x) for x in xs)
+    if not s:
+        raise ValueError("percentile of an empty sample")
+    if len(s) == 1:
+        return s[0]
+    pos = q / 100.0 * (len(s) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    frac = pos - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+def p50(xs: Sequence[float]) -> float:
+    return percentile(xs, 50.0)
+
+
+def p99(xs: Sequence[float]) -> float:
+    return percentile(xs, 99.0)
+
+
+def latency_histogram(xs: Sequence[float], bins: int = 10,
+                      lo: Optional[float] = None,
+                      hi: Optional[float] = None
+                      ) -> tuple[list[float], list[int]]:
+    """Equal-width histogram → (bin edges, counts); ``len(edges) ==
+    bins + 1`` and ``sum(counts) == len(xs)``. Values outside an
+    explicit [lo, hi] clamp into the edge bins (a latency histogram
+    must not silently drop outliers — they ARE the story)."""
+    if bins < 1:
+        raise ValueError("bins must be >= 1")
+    vals = [float(x) for x in xs]
+    if not vals:
+        raise ValueError("histogram of an empty sample")
+    lo = min(vals) if lo is None else float(lo)
+    hi = max(vals) if hi is None else float(hi)
+    if hi <= lo:
+        hi = lo + 1e-12
+    width = (hi - lo) / bins
+    edges = [lo + i * width for i in range(bins + 1)]
+    counts = [0] * bins
+    for v in vals:
+        idx = int((v - lo) / width)
+        counts[min(max(idx, 0), bins - 1)] += 1
+    return edges, counts

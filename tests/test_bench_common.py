@@ -1,0 +1,145 @@
+"""Latency-statistics helpers (percentile/histogram, pinned against
+numpy's definitions) and the trend-gate logic that CI runs over
+BENCH_kernel.json and BENCH_serve.json — including the serving SLO row
+family added with the online front-end."""
+import numpy as np
+import pytest
+
+from repro.serving.metrics import latency_histogram, p50, p99, percentile
+
+from benchmarks.trend_check import _gate_for, compare
+
+
+# -- percentiles -------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 100.0])
+@pytest.mark.parametrize("n", [1, 2, 5, 100])
+def test_percentile_matches_numpy_linear(q, n):
+    rng = np.random.default_rng(int(q) * 101 + n)
+    xs = rng.exponential(3.0, size=n).tolist()
+    assert percentile(xs, q) == pytest.approx(
+        float(np.percentile(xs, q)), rel=1e-12, abs=1e-12)
+
+
+def test_percentile_validation():
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+    with pytest.raises(ValueError):
+        percentile([1.0], -1.0)
+    with pytest.raises(ValueError):
+        percentile([1.0], 100.5)
+
+
+def test_p50_p99_shortcuts():
+    xs = list(range(1, 101))
+    assert p50(xs) == pytest.approx(float(np.percentile(xs, 50)))
+    assert p99(xs) == pytest.approx(float(np.percentile(xs, 99)))
+    assert p50([7.0]) == p99([7.0]) == 7.0
+
+
+def test_percentile_order_independent():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(xs, 50.0) == 3.0
+    assert percentile(sorted(xs, reverse=True), 50.0) == 3.0
+
+
+# -- histogram ---------------------------------------------------------------
+
+def test_latency_histogram_basic():
+    xs = [0.0, 1.0, 2.0, 3.0, 4.0]
+    edges, counts = latency_histogram(xs, bins=4)
+    assert len(edges) == 5 and len(counts) == 4
+    assert edges[0] == 0.0 and edges[-1] == 4.0
+    assert sum(counts) == len(xs)
+    assert counts == [1, 1, 1, 2]       # top edge value lands in last bin
+
+
+def test_latency_histogram_clamps_outliers():
+    """Explicit bounds must not drop samples — outliers ARE the tail."""
+    xs = [-5.0, 0.5, 1.5, 99.0]
+    edges, counts = latency_histogram(xs, bins=2, lo=0.0, hi=2.0)
+    assert sum(counts) == 4
+    assert counts == [2, 2]             # -5 → first bin, 99 → last bin
+
+
+def test_latency_histogram_degenerate_and_invalid():
+    edges, counts = latency_histogram([2.0, 2.0, 2.0], bins=3)
+    assert sum(counts) == 3             # constant sample still bins
+    with pytest.raises(ValueError):
+        latency_histogram([], bins=2)
+    with pytest.raises(ValueError):
+        latency_histogram([1.0], bins=0)
+
+
+# -- trend gate --------------------------------------------------------------
+
+def _doc(**rows):
+    return {"rows": [{"name": k, "us_per_call": v, "derived": ""}
+                     for k, v in rows.items()]}
+
+
+PIPE = "engine_winograd_int8_prepared_fused_b2i16c8k12"
+DYN = "engine_winograd_int8_b2i16c8k12"
+P99 = "serve_p99_util60_w0.25"
+P50 = "serve_p50_util60_w0.25"
+SOLO = "serve_solo_w0.25"
+
+
+def test_gate_for_row_families():
+    m, norm = _gate_for(PIPE)
+    assert m and norm == DYN
+    m, norm = _gate_for(P99)
+    assert m and norm == SOLO
+    m, norm = _gate_for(P50)
+    assert m and norm == SOLO
+    # Normalizers and informational rows are not themselves gated.
+    for name in (DYN, SOLO, "serve_alone_p99_w0.25",
+                 "kernel_wino_gemm_x", "engine_winograd_int8_sharded_x"):
+        assert _gate_for(name) == (None, None)
+
+
+def test_compare_fails_only_when_both_views_regress():
+    old = _doc(**{P99: 100.0, SOLO: 50.0})
+    # Raw 2× worse but the machine is uniformly 2× slower (solo too):
+    # normalized view is flat → no failure.
+    new = _doc(**{P99: 200.0, SOLO: 100.0})
+    checked, failures, fresh = compare(new, old, tol=0.2)
+    assert checked == 1 and failures == [] and fresh == []
+    # Normalized view regresses (solo got faster) but raw is flat → the
+    # normalizer row is itself a measurement; no failure.
+    new = _doc(**{P99: 100.0, SOLO: 25.0})
+    _, failures, _ = compare(new, old, tol=0.2)
+    assert failures == []
+    # Both views regress → gate fires.
+    new = _doc(**{P99: 200.0, SOLO: 50.0})
+    _, failures, _ = compare(new, old, tol=0.2)
+    assert len(failures) == 1 and P99 in failures[0]
+    # Within tolerance → pass.
+    new = _doc(**{P99: 115.0, SOLO: 50.0})
+    _, failures, _ = compare(new, old, tol=0.2)
+    assert failures == []
+
+
+def test_compare_gates_pipeline_and_serve_families_independently():
+    old = _doc(**{PIPE: 10.0, DYN: 100.0, P99: 100.0, SOLO: 50.0})
+    new = _doc(**{PIPE: 30.0, DYN: 100.0, P99: 300.0, SOLO: 50.0})
+    checked, failures, _ = compare(new, old, tol=0.2)
+    assert checked == 2 and len(failures) == 2
+
+
+def test_compare_reports_fresh_rows_without_gating():
+    """Rows a PR adds (new rate, new shape) have no baseline yet: they
+    are reported, not failed."""
+    old = _doc(**{P99: 100.0, SOLO: 50.0})
+    new = _doc(**{P99: 100.0, SOLO: 50.0,
+                  "serve_p99_util80_w0.25": 500.0})
+    checked, failures, fresh = compare(new, old, tol=0.2)
+    assert checked == 1 and failures == []
+    assert fresh == ["serve_p99_util80_w0.25"]
+
+
+def test_compare_no_normalize_uses_raw_only():
+    old = _doc(**{P99: 100.0, SOLO: 50.0})
+    new = _doc(**{P99: 200.0, SOLO: 100.0})   # uniformly slower machine
+    _, failures, _ = compare(new, old, tol=0.2, normalize=False)
+    assert len(failures) == 1                 # raw-only view does fire
