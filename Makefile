@@ -2,11 +2,28 @@
 
 PY ?= python
 
-.PHONY: verify quickstart bench-kernels bench-smoke bench-serve-smoke \
-	serve-int8 serve-online
+.PHONY: verify quickstart lint certify certify-write bench-kernels \
+	bench-smoke bench-serve-smoke serve-int8 serve-online
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Repo-specific static hazard linter (repro.analysis.lint): jit arg-flavor
+# mixing, cached array args, unsynced timing windows, library->harness
+# imports. Fails on any unwaived finding.
+lint:
+	PYTHONPATH=src $(PY) -m repro.analysis.lint
+
+# Static range certification (repro.analysis.ranges): proves every served
+# (spec, base, hadamard_bits, Cin) config int32-accumulator-safe and
+# Hadamard-faithful, checks the seeded overflow control is refused, and
+# diffs the recomputed report against the committed ANALYSIS_ranges.json
+# (regenerate deliberately with `make certify-write`).
+certify:
+	PYTHONPATH=src $(PY) -m repro.analysis.certify
+
+certify-write:
+	PYTHONPATH=src $(PY) -m repro.analysis.certify --write
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

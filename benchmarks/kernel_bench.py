@@ -77,6 +77,79 @@ def hbm_bytes_model(B, H, W, Ci, Co, spec: WinogradSpec,
     return staged, fused
 
 
+def hbm_model_crosscheck(smoke: bool = False) -> dict:
+    """Gate ``hbm_bytes_model`` against the compiler's own accounting.
+
+    The analytic model above is what the benchmark rows and the roofline
+    narrative lean on — if it drifts from what XLA actually materializes
+    (a kernel grows an HBM intermediate, a dtype widens), every derived
+    number silently lies. This cross-checks it per compiled unit: the
+    fused serving path is exactly two ``pallas_call`` jits
+    (``input_transform`` → ``fused_gemm_output``), and the model's fused
+    total decomposes as the sum of their ENTRY-boundary bytes
+    (``repro.analysis.hlo_cost.entry_boundary_bytes``: parameters in,
+    ROOT out — the "touch operands once, write result once" semantics
+    the model prices). Boundary bytes, not ``analyze_hlo``'s
+    instruction total: interpret-mode Pallas emulation materializes
+    VMEM-resident compute as instructions and inflates that total ~17×.
+
+    The run FAILS (RuntimeError) on >2× divergence; the slack covers
+    the scale/matrix operands and padding the model rounds away.
+    """
+    from repro.analysis.hlo_cost import entry_boundary_bytes
+    from repro.core.winograd import make_matrices
+    from repro.kernels.fused_serve import fused_gemm_output
+    from repro.kernels.wino_transform import input_transform
+
+    spec = WinogradSpec(m=4, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9))
+    B, H, W, Ci, Co = SMOKE_ENGINE_SHAPES[0]
+    _, _, nt_h, _ = _pad_amounts(H, spec.m, spec.r, "same")
+    _, _, nt_w, _ = _pad_amounts(W, spec.m, spec.r, "same")
+    T, n = B * nt_h * nt_w, spec.n
+    P = n * n
+    mats = make_matrices(spec)
+    tiles = jnp.zeros((T, Ci, n, n), jnp.float32)
+    scales = jnp.ones((P, 1), jnp.float32)
+    xq = jnp.zeros((P, T, Ci), jnp.int8)
+    uq = jnp.zeros((P, Ci, Co), jnp.int8)
+    cinvt = jnp.asarray(mats.CinvT, jnp.float32)
+    bpt = jnp.asarray(mats.BPT, jnp.float32)
+    apt = jnp.asarray(mats.APT, jnp.float32)
+
+    boundary = 0
+    for name, lowered in (
+        ("input_transform",
+         input_transform.lower(tiles, cinvt, bpt, scales,
+                               changes_base=True, interpret=True)),
+        ("fused_gemm_output",
+         fused_gemm_output.lower(xq, uq, scales, scales, cinvt, apt,
+                                 m=spec.m, requant_bits=9,
+                                 changes_base=True, interpret=True)),
+    ):
+        bb = entry_boundary_bytes(lowered.compile().as_text())
+        boundary += bb["total"]
+        print(f"# hbm_crosscheck {name}: params {bb['parameter_bytes']} "
+              f"+ root {bb['root_bytes']} bytes")
+
+    _, model_fused = hbm_bytes_model(B, H, W, Ci, Co, spec,
+                                     requant_glue=False)
+    ratio = max(boundary, model_fused) / max(min(boundary, model_fused), 1)
+    emit("hbm_model_crosscheck_fused", ratio,
+         "compiled ENTRY-boundary bytes vs analytic model (ratio)",
+         shape=f"{B}x{H}x{W}x{Ci}->{Co}",
+         boundary_bytes=boundary, model_bytes=model_fused)
+    if ratio > 2.0:
+        raise RuntimeError(
+            f"hbm_bytes_model diverged from the compiled kernels: "
+            f"model {model_fused} vs ENTRY-boundary {boundary} bytes "
+            f"({ratio:.2f}x > 2x) — the model or a kernel changed; "
+            f"reconcile them before trusting the HBM columns")
+    print(f"# hbm_crosscheck: model {model_fused} vs boundary {boundary} "
+          f"bytes ({ratio:.2f}x <= 2x)")
+    return {"boundary": boundary, "model": model_fused, "ratio": ratio}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -92,6 +165,7 @@ def main(argv=None):
     ensure_host_devices(args.host_devices, "benchmarks.kernel_bench",
                         argv if argv is not None else sys.argv[1:])
 
+    hbm_model_crosscheck(smoke=args.smoke)
     if not args.smoke:
         xla_sweep()
         gemm_micro()

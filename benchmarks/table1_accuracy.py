@@ -81,8 +81,10 @@ def main(argv=None):
                 continue  # paper's table has no direct 9-bit row
             cfg = make_variant(name, args.width, hb)
             t0 = time.time()
+            # train_variant returns a host float (its float(acc) pulls
+            # results to host every tail step) — synced before return.
             acc = train_variant(cfg, args.steps, args.batch)
-            us = (time.time() - t0) * 1e6 / args.steps
+            us = (time.time() - t0) * 1e6 / args.steps  # lint: waive=unsynced-timing
             tag = f"{name}_8b" + ("+9b" if hb == 9 and name != "direct"
                                   else "")
             emit(f"table1_{tag}", us, f"train_acc={acc:.3f}")

@@ -22,8 +22,9 @@ def main(argv=None):
         for name in ("direct", "L-flex"):
             cfg = make_variant(name, width, 8)
             t0 = time.time()
+            # train_variant returns a host float — synced before return.
             acc = train_variant(cfg, args.steps, args.batch)
-            us = (time.time() - t0) * 1e6 / args.steps
+            us = (time.time() - t0) * 1e6 / args.steps  # lint: waive=unsynced-timing
             emit(f"table2_{name}_w{width}", us, f"train_acc={acc:.3f}")
 
 

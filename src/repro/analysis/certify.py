@@ -1,0 +1,182 @@
+"""CLI: sweep the served config space through the range certifier.
+
+``python -m repro.analysis.certify`` (the ``make certify`` target) runs
+three checks and exits non-zero if any fails:
+
+1. **Coverage** — every currently-served config (F(2,3)/F(4,3)/F(6,3) ×
+   canonical/legendre × hadamard_bits {None, 8, 9} at ResNet18 channel
+   widths) must be PROVED: int32-accumulator-safe and Hadamard-faithful.
+2. **Negative control** — a seeded overflow config (F(6,3) canonical at
+   an absurd Cin) must come back UNSAFE. A certifier that proves
+   everything proves nothing; this catches a broken bound before it
+   waves through a real overflow.
+3. **Drift** — the recomputed report must match the committed
+   ``ANALYSIS_ranges.json`` byte-for-byte (as parsed JSON). Any change
+   to the transform construction, the base change, or the certifier
+   itself shows up as a reviewable diff; regenerate deliberately with
+   ``--write``.
+
+The committed report keeps the *decision-grade* slice per config
+(verdicts, accumulator bound/bits, output growth) plus the per-base
+amplification table — the full per-stage breakdown stays available via
+``--table`` or ``repro.analysis.ranges.certify_config``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.ranges import amplifications, certify_config
+
+__all__ = ["SWEEP_M", "SWEEP_BASES", "SWEEP_BITS", "SWEEP_CIN",
+           "NEGATIVE_CONTROL", "build_report", "main"]
+
+DEFAULT_JSON = Path("ANALYSIS_ranges.json")
+
+SWEEP_M = (2, 4, 6)
+SWEEP_R = 3
+SWEEP_BASES = ("canonical", "legendre")
+SWEEP_BITS = (None, 8, 9)
+SWEEP_CIN = (64, 128, 256, 512)          # ResNet18 channel widths
+
+#: Seeded-unsafe config: F(6,3) canonical with Cin far past the int32
+#: accumulator budget (overflow at Cin > (2³¹−1)/127² ≈ 133152). The
+#: certifier MUST refuse it; CI fails if it ever stops refusing.
+NEGATIVE_CONTROL = {"m": 6, "r": 3, "base": "canonical",
+                    "hadamard_bits": 8, "cin": 2 ** 18}
+
+
+def _row(m: int, r: int, base: str, bits, cin: int) -> dict:
+    rep = certify_config(m, r, base, bits, cin)
+    acc = rep.stage("gemm_accumulator")
+    out = rep.stage("output")
+    return {
+        "m": m, "r": r, "base": base, "hadamard_bits": bits, "cin": cin,
+        "int32_safe": rep.int32_safe,
+        "hadamard_safe": rep.hadamard_safe,
+        "proved": rep.proved,
+        "acc_bound": int(acc.bound),
+        "acc_bits": int(acc.bits),
+        "output_log2_growth": round(out.bits, 4),
+    }
+
+
+def build_report() -> dict:
+    """The machine-checkable report CI diffs (deterministic: every value
+    derives from exact rational arithmetic)."""
+    amp_table = {}
+    for m in SWEEP_M:
+        for base in SWEEP_BASES:
+            amp = amplifications(m, SWEEP_R, base)
+            amp_table[f"F({m},{SWEEP_R})/{base}"] = {
+                k: {"value": round(float(v), 6), "exact": str(v)}
+                for k, v in sorted(amp.items())
+                if k in ("BT", "G", "AT", "CinvT", "input_composed",
+                         "weight_composed", "output_composed",
+                         "input_staged", "weight_staged", "output_staged")}
+    rows = [_row(m, SWEEP_R, base, bits, cin)
+            for m in SWEEP_M for base in SWEEP_BASES
+            for bits in SWEEP_BITS for cin in SWEEP_CIN]
+    nc = NEGATIVE_CONTROL
+    control = _row(nc["m"], nc["r"], nc["base"], nc["hadamard_bits"],
+                   nc["cin"])
+    return {"schema": 1, "amplification": amp_table, "rows": rows,
+            "negative_control": control}
+
+
+def _diff(committed, computed, path="") -> list[str]:
+    if type(committed) is not type(computed):
+        return [f"{path}: type {type(committed).__name__} != "
+                f"{type(computed).__name__}"]
+    if isinstance(computed, dict):
+        out = []
+        for k in sorted(set(committed) | set(computed)):
+            if k not in committed:
+                out.append(f"{path}.{k}: missing from committed report")
+            elif k not in computed:
+                out.append(f"{path}.{k}: no longer computed")
+            else:
+                out.extend(_diff(committed[k], computed[k], f"{path}.{k}"))
+        return out
+    if isinstance(computed, list):
+        if len(committed) != len(computed):
+            return [f"{path}: length {len(committed)} != {len(computed)}"]
+        return [d for i, (a, b) in enumerate(zip(committed, computed))
+                for d in _diff(a, b, f"{path}[{i}]")]
+    if committed != computed:
+        return [f"{path}: committed {committed!r} != computed {computed!r}"]
+    return []
+
+
+def _print_table(report: dict):
+    print(f"{'config':<34} {'acc_bound':>12} {'bits':>5} "
+          f"{'out_growth':>11} verdict")
+    for row in report["rows"] + [report["negative_control"]]:
+        cfg = (f"F({row['m']},{row['r']}) {row['base']:<9} "
+               f"b={str(row['hadamard_bits']):<4} Cin={row['cin']}")
+        verdict = "PROVED" if row["proved"] else "UNSAFE"
+        print(f"{cfg:<34} {row['acc_bound']:>12} {row['acc_bits']:>5} "
+              f"{row['output_log2_growth']:>11.2f} {verdict}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.certify",
+        description="Static range certification sweep (see module docs).")
+    ap.add_argument("--json", type=Path, default=DEFAULT_JSON,
+                    help=f"committed report path (default {DEFAULT_JSON})")
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the committed report instead of "
+                         "diffing against it")
+    ap.add_argument("--table", action="store_true",
+                    help="print the human-readable sweep table")
+    args = ap.parse_args(argv)
+
+    report = build_report()
+    if args.table:
+        _print_table(report)
+
+    rc = 0
+    unproved = [r for r in report["rows"] if not r["proved"]]
+    for r in unproved:
+        print(f"certify: UNSAFE served config: F({r['m']},{r['r']}) "
+              f"{r['base']} bits={r['hadamard_bits']} Cin={r['cin']}")
+    if unproved:
+        rc = 1
+
+    if report["negative_control"]["proved"]:
+        print("certify: BROKEN — the seeded overflow control "
+              f"({NEGATIVE_CONTROL}) was proved safe; the certifier's "
+              "bounds are no longer conservative")
+        rc = 2
+
+    if args.write:
+        args.json.write_text(json.dumps(report, indent=1) + "\n")
+        print(f"certify: wrote {args.json} "
+              f"({len(report['rows'])} rows, control refused)")
+        return rc
+
+    if not args.json.exists():
+        print(f"certify: {args.json} missing — run with --write and "
+              "commit it")
+        return max(rc, 1)
+    committed = json.loads(args.json.read_text())
+    drift = _diff(committed, report)
+    for d in drift[:20]:
+        print(f"certify: drift {d}")
+    if len(drift) > 20:
+        print(f"certify: ... and {len(drift) - 20} more")
+    if drift:
+        print(f"certify: {args.json} is stale — the transform "
+              "construction or the certifier changed; regenerate with "
+              "--write and commit the diff")
+        return max(rc, 1)
+    print(f"certify: {len(report['rows'])} served configs PROVED, "
+          "negative control refused, committed report matches")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,7 @@ import json
 import re
 from typing import Optional
 
-__all__ = ["analyze_hlo", "HloCost"]
+__all__ = ["analyze_hlo", "HloCost", "entry_boundary_bytes"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -202,6 +202,36 @@ def _fusion_in_bytes(callee_instrs: list, operand_names: list,
         else:
             total += full
     return total
+
+
+def entry_boundary_bytes(text: str) -> dict:
+    """Bytes crossing the ENTRY computation boundary: parameter reads +
+    ROOT output writes.
+
+    This is the "touch every operand once, write the result once" floor
+    of a compiled module — the same semantics as an analytic HBM model
+    of a perfectly fused kernel. ``analyze_hlo``'s instruction-level
+    total is the wrong comparator for that model under Pallas
+    *interpret* mode: emulation materializes every VMEM-resident
+    intermediate as an instruction, inflating byte counts ~17× over real
+    kernel traffic. The boundary count is emulation-invariant, so the
+    kernel benchmark's model-vs-compiler cross-check
+    (``benchmarks.kernel_bench.hbm_model_crosscheck``) gates against it.
+    """
+    comps = _split_computations(text)
+    lines = comps.get("__entry__", [])
+    param_bytes = 0
+    root_bytes = 0
+    for line in lines:
+        ins = _parse_instr(line)
+        if ins is None:
+            continue
+        if ins.op == "parameter":
+            param_bytes += _type_elems_bytes(ins.type_str)[1]
+        if line.startswith("ROOT"):
+            root_bytes += _type_elems_bytes(ins.type_str)[1]
+    return {"parameter_bytes": param_bytes, "root_bytes": root_bytes,
+            "total": param_bytes + root_bytes}
 
 
 def analyze_hlo(text: str) -> HloCost:

@@ -93,6 +93,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Iterable, Optional
 
 import jax
@@ -143,7 +144,8 @@ class ConvEngine:
                  data_axis="data",
                  blocks: Optional[tuple] = None,
                  autotune: bool = False,
-                 autotune_opts: Optional[dict] = None):
+                 autotune_opts: Optional[dict] = None,
+                 certify: str = "warn"):
         """``hadamard_bits``: the int8 backend's 8/9-bit Hadamard requant
         stage. The default mirrors the spec's QAT setting
         (``spec.quant.hadamard_bits``) so serving matches what the model
@@ -184,7 +186,17 @@ class ConvEngine:
         re-tunes*. Numerics are block-independent; the knob changes
         wall-time only. ``autotune_opts`` forwards keyword arguments to
         ``repro.conv.autotune.autotune_blocks`` (``iters``,
-        ``max_candidates``, …) to bound the search cost."""
+        ``max_candidates``, …) to bound the search cost.
+
+        ``certify``: pack-time static range certification
+        (``repro.analysis.ranges``). Every int8 layer's
+        ``(spec, base, hadamard_bits, Cin)`` is proved
+        int32-accumulator-safe and Hadamard-faithful before its weights
+        are packed: ``"warn"`` (default) emits a ``RuntimeWarning`` on
+        an unprovable config, ``"error"`` refuses it (``ValueError``),
+        ``"off"`` skips the check. The proof is symbolic (exact-rational
+        worst case) and cached per config, so the gate costs microseconds
+        after the first layer."""
         if spec is None:
             policy = policy or ConvPolicy(backend="direct",
                                           fallback="direct")
@@ -206,6 +218,10 @@ class ConvEngine:
         self.mesh = mesh
         self.data_axis = data_axis
         self.blocks = validate_blocks(blocks)
+        if certify not in ("off", "warn", "error"):
+            raise ValueError(f"certify must be 'off', 'warn' or 'error', "
+                             f"got {certify!r}")
+        self.certify = certify
         self.autotune = autotune
         self.autotune_opts = dict(autotune_opts or {})
         self.mats = make_matrices(spec) if spec is not None else None
@@ -397,6 +413,26 @@ class ConvEngine:
 
     # -- prepare / calibrate ------------------------------------------------
 
+    def _certify_layer(self, layer: str, *, cin: int):
+        """Pack-time range gate: prove this layer's config safe before
+        its weights are packed (see ``certify`` in ``__init__``)."""
+        if self.certify == "off":
+            return
+        from repro.analysis.ranges import certify_config
+        rep = certify_config(self.spec.m, self.spec.r, self.spec.base,
+                             self.hadamard_bits, cin)
+        if rep.proved:
+            return
+        acc = rep.stage("gemm_accumulator")
+        msg = (f"layer {layer!r}: {rep.summary()} — worst-case int32 "
+               f"accumulator {int(acc.bound)} ({acc.bits:.0f} bits) "
+               f"{'overflows int32' if not rep.int32_safe else 'exceeds the fp32-exact limit; the Hadamard requant cast can round'}"
+               f". Reduce Cin, split the reduction, or pass "
+               f"certify='off' to override.")
+        if self.certify == "error":
+            raise ValueError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
     def prepare_layer(self, layer: str, w: jnp.ndarray, *,
                       stride: int = 1) -> bool:
         """Pack one layer's weights if the policy routes it to int8.
@@ -408,6 +444,7 @@ class ConvEngine:
                                    stride=stride, in_channels=w.shape[2])
         if backend != "winograd_int8":
             return False
+        self._certify_layer(layer, cin=w.shape[2])
         old = self.packed.get(layer)
         new = pack_weights(w, self.spec)
         if (old is not None and old.blocks is not None

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 __all__ = [
     "QuantConfig",
     "qmax",
+    "storage_dtype",
     "abs_max_scale",
     "fake_quant",
     "quantize_int",
@@ -30,6 +31,28 @@ __all__ = [
 def qmax(bits: int) -> int:
     """Largest representable magnitude of a signed symmetric b-bit grid."""
     return 2 ** (bits - 1) - 1
+
+
+def storage_dtype(bits: int):
+    """Narrowest signed integer dtype that holds a symmetric b-bit grid.
+
+    The grid's magnitudes span ±``qmax(bits)``, so 8-bit grids ride in
+    int8, the paper's 9-bit Hadamard grid in int16, and anything up to
+    32 bits in int32. This is also the stage-boundary dtype the static
+    range certifier (``repro.analysis.ranges``) assigns to quantized
+    stages, so the certifier and the runtime cannot disagree about
+    where a grid physically lives.
+    """
+    if bits < 2:
+        raise ValueError(f"a signed symmetric grid needs >= 2 bits, "
+                         f"got {bits}")
+    if bits <= 8:
+        return jnp.int8
+    if bits <= 16:
+        return jnp.int16
+    if bits <= 32:
+        return jnp.int32
+    raise ValueError(f"no integer storage dtype for {bits}-bit grids")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,12 +137,28 @@ def fake_quant(x: jnp.ndarray, bits: Optional[int],
 
 def quantize_int(x: jnp.ndarray, bits: int = 8,
                  axis: Optional[Sequence[int]] = None,
-                 dtype=jnp.int8) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Quantize to a true integer array + fp scale. 9-bit grids ride in int16."""
+                 dtype=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize to a true integer array + fp scale.
+
+    ``dtype=None`` (default) selects the narrowest dtype that holds the
+    grid (``storage_dtype``): int8 through 8 bits, int16 for the
+    paper's 9-bit Hadamard grid. An *explicitly* passed dtype too
+    narrow for ``bits`` raises instead of silently widening — the
+    historical ``bits=9, dtype=int8`` call would hand back int16 behind
+    the caller's explicit request, and a caller that then reasons about
+    the int8 value range (VMEM budgets, the range certifier's stage
+    bounds) would be reasoning about the wrong grid.
+    """
+    if dtype is None:
+        dtype = storage_dtype(bits)
+    elif qmax(bits) > jnp.iinfo(dtype).max:
+        raise ValueError(
+            f"a {bits}-bit symmetric grid spans ±{qmax(bits)}, which "
+            f"does not fit the requested {jnp.dtype(dtype).name} — pass "
+            f"dtype=None to auto-widen (storage_dtype({bits}) = "
+            f"{jnp.dtype(storage_dtype(bits)).name})")
     scale = abs_max_scale(x, bits, axis=axis)
     q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits))
-    if bits > 8 and dtype == jnp.int8:
-        dtype = jnp.int16
     return q.astype(dtype), scale
 
 

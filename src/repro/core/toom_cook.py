@@ -30,6 +30,8 @@ __all__ = [
     "default_points",
     "toom_cook_matrices",
     "to_float",
+    "row_l1_norms",
+    "max_row_l1",
     "mults_per_output_2d",
 ]
 
@@ -188,6 +190,26 @@ def toom_cook_matrices(
 def to_float(M: np.ndarray, dtype=np.float64) -> np.ndarray:
     """Convert an object/Fraction matrix to floating point."""
     return np.array([[float(x) for x in row] for row in M], dtype=dtype)
+
+
+def row_l1_norms(M: np.ndarray) -> list[Fraction]:
+    """Exact per-row L1 norms of an object/Fraction matrix.
+
+    The worst-case amplification framework of Barabasz et al. 2018: for
+    a linear stage ``y = M x`` with ``|x_i| <= a``, the tight worst-case
+    bound is ``|y_i| <= a * Σ_j |M_ij|`` — attained by the sign-aligned
+    input ``x_j = a * sign(M_ij)``. These norms are THE inputs to the
+    static range certifier (``repro.analysis.ranges``); keeping them in
+    exact rational arithmetic means the certified bounds inherit the
+    exactness of the transform construction above.
+    """
+    return [sum((abs(Fraction(x)) for x in row), Fraction(0)) for row in M]
+
+
+def max_row_l1(M: np.ndarray) -> Fraction:
+    """Exact max per-row L1 norm — the matrix's worst-case amplification
+    factor as an operator on the max-norm ball (see ``row_l1_norms``)."""
+    return max(row_l1_norms(M))
 
 
 def mults_per_output_2d(m: int, r: int) -> float:

@@ -56,6 +56,16 @@ from repro.kernels.wino_transform import sandwich_stack
 
 __all__ = ["fused_gemm_output"]
 
+# Range contract: the (P, bm, bn) VMEM scratch accumulates int8×int8
+# products over the full K = Cin grid in int32, and the epilogue casts
+# it to fp32 inside ``requant_plane``. The static certifier
+# (``repro.analysis.ranges``) proves per-config that the worst-case
+# accumulator stays within ``wino_gemm.INT32_ACC_LIMIT`` (no overflow)
+# and ``wino_gemm.FP32_EXACT_INT_LIMIT`` (the cast is exact, so the
+# fused requant is faithful to the staged integer formula); the
+# ConvEngine ``certify=`` gate refuses unprovable configs before any
+# launch reaches this kernel.
+
 
 def _fused_kernel(x_ref, w_ref, deq_ref, rq_ref, cinvt_ref, apt_ref,
                   out_ref, acc_ref, *, n: int, m: int, qm: int | None,

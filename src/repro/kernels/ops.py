@@ -430,8 +430,9 @@ def execute_int8_sharded(tiles: jnp.ndarray, u_q: jnp.ndarray,
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_executor(spec: WinogradSpec, mesh, hadamard_bits, interpret,
-                      blocks, data_axis):
+def _sharded_executor(spec: WinogradSpec, mesh: jax.sharding.Mesh,
+                      hadamard_bits: Optional[int], interpret: bool,
+                      blocks: Optional[tuple], data_axis: str | tuple):
     """shard_map slab executor, cached per static configuration.
 
     The heavy lowering is cached regardless — ``input_transform`` and

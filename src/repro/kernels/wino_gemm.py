@@ -38,7 +38,31 @@ from jax.experimental import pallas as pl
 from repro.core.quantization import qmax
 
 __all__ = ["wino_gemm", "requant_plane", "DEFAULT_BLOCKS",
-           "default_blocks", "validate_blocks", "MAX_BLOCK"]
+           "default_blocks", "validate_blocks", "MAX_BLOCK",
+           "INT32_ACC_LIMIT", "FP32_EXACT_INT_LIMIT",
+           "max_abs_accumulator"]
+
+#: Largest magnitude the kernels' int32 accumulator can hold. Both this
+#: kernel's output-revisiting accumulation and ``fused_serve``'s
+#: (P, bm, bn) VMEM scratch accumulate int8×int8 products over the full
+#: K = Cin grid in int32 — the static range certifier
+#: (``repro.analysis.ranges``) proves configs against exactly this bound.
+INT32_ACC_LIMIT = 2 ** 31 - 1
+
+#: Largest integer magnitude fp32 represents exactly (24-bit mantissa).
+#: ``requant_plane`` casts the int32 accumulator to fp32 before the
+#: Hadamard requant multiply; accumulators beyond this limit round in
+#: the cast itself, so the requant stops being faithful to the staged
+#: integer formula. The certifier's hadamard_bits-safe verdict proves
+#: the worst-case accumulator stays under it.
+FP32_EXACT_INT_LIMIT = 2 ** 24
+
+
+def max_abs_accumulator(K: int, bits: int = 8) -> int:
+    """Worst-case |int32 accumulator| after a K-deep int8×int8 GEMM
+    reduction: every operand pinned to ±qmax(bits) with aligned signs.
+    Exact and attained (see the adversarial tests) — K·127² for int8."""
+    return K * qmax(bits) ** 2
 
 # MXU-aligned defaults: the systolic array is 128×128; K blocks of 256
 # halve the number of grid steps at an acceptable VMEM footprint

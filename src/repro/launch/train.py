@@ -97,6 +97,10 @@ def main(argv=None):
             params, opt_state, metrics = setup.step_fn(
                 params, opt_state, batch, jnp.int32(step))
             if step % args.log_every == 0 or step == run.total_steps - 1:
+                # Close the timing window on finished device work, not on
+                # async dispatch (float(loss) used to sync only as a side
+                # effect).
+                jax.block_until_ready(metrics)
                 loss = float(metrics["loss"])
                 gn = float(metrics["grad_norm"])
                 dt = time.time() - t_last

@@ -1,0 +1,9 @@
+"""Known-bad: lru_cache on a function taking (possibly traced) arrays —
+the tracer-leak class behind the old cached make_matrices crash.
+Expected finding: cached-array-args."""
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def gram(x):          # unannotated: could be an array / tracer  <-- finding
+    return x @ x.T

@@ -1,0 +1,17 @@
+"""Known-bad: jitted callable fed raw numpy at one site, device arrays at
+another (the PR-6 bucket-executor dispatch-cache doubling). Expected
+finding: jit-arg-flavor."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def scale(x):
+    return x * 2
+
+
+host = np.ones((8, 8), np.float32)
+dev = jax.device_put(np.ones((8, 8), np.float32))
+
+scale(host)   # numpy flavor populates one dispatch-cache entry...
+scale(dev)    # ...device flavor populates a second one  <-- finding

@@ -1,0 +1,8 @@
+"""Known-bad (when linted as a repro.* library module): the library
+importing the benchmark harness. Expected finding:
+repro-imports-benchmarks."""
+from benchmarks.common import time_fn  # <-- finding: dependency inversion
+
+
+def timed(f, *args):
+    return time_fn(f, *args)

@@ -1,0 +1,10 @@
+"""Known-bad: elapsed-time window over async JAX dispatch with no
+block_until_ready. Expected finding: unsynced-timing."""
+import time
+
+
+def bench(f, x):
+    t0 = time.perf_counter()
+    for _ in range(10):
+        y = f(x)           # async dispatch; y is a future
+    return time.perf_counter() - t0      # <-- finding: times dispatch only

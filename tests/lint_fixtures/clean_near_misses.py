@@ -1,0 +1,47 @@
+"""Near-miss corpus: patterns adjacent to each hazard that must NOT be
+flagged — pins the linter's false-positive behavior."""
+import functools
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def scale(x):
+    return x * 2
+
+
+# Single consistent flavor across call sites: fine.
+a = np.ones((4,), np.float32)
+b = np.zeros((4,), np.float32)
+scale(a)
+scale(b)
+
+
+@functools.lru_cache(maxsize=None)
+def matrices(m: int, r: int, base: str) -> tuple:
+    """Hashable-annotated params: the sanctioned cache pattern."""
+    return (m, r, base)
+
+
+def synced_bench(f, x):
+    t0 = time.perf_counter()
+    y = f(x)
+    jax.block_until_ready(y)
+    return time.perf_counter() - t0      # sync in scope: fine
+
+
+def deadline_loop(budget: float):
+    # One-sided Sub against a non-time name (serving-loop idiom): fine.
+    deadline = time.perf_counter() + budget
+    n = 0
+    while deadline - time.perf_counter() > 0:
+        n += 1
+    return n
+
+
+def waived_bench(f, x):
+    t0 = time.perf_counter()
+    y = f(x)
+    return time.perf_counter() - t0  # lint: waive=unsynced-timing

@@ -1,0 +1,288 @@
+"""Range-certifier soundness and tightness (repro.analysis.ranges).
+
+Soundness: randomized executions never exceed the certified per-stage
+bounds. Tightness: adversarial sign-aligned constructions *attain* the
+integer-stage bounds exactly and come within float rounding of the
+fp-stage bounds — the certificates are proofs, not fudge factors.
+"""
+import json
+from fractions import Fraction
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypo import hypothesis, st
+
+from repro.analysis.certify import NEGATIVE_CONTROL, build_report
+from repro.analysis.ranges import (amplifications, certify_config,
+                                   exact_matrices)
+from repro.core.toom_cook import max_row_l1, row_l1_norms, to_float
+from repro.kernels.wino_gemm import (FP32_EXACT_INT_LIMIT, INT32_ACC_LIMIT,
+                                     max_abs_accumulator)
+
+REPO = Path(__file__).resolve().parents[1]
+
+SERVED = [(m, base, bits)
+          for m in (2, 4, 6)
+          for base in ("canonical", "legendre")
+          for bits in (None, 8, 9)]
+
+
+# ---------------------------------------------------------------------------
+# the exact algebra the certifier's tight bounds rest on
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [2, 4, 6])
+def test_composed_operators_are_base_exact(m):
+    """BPT·C⁻ᵀ == BT, APT·C⁻ᵀ == AT, C⁻¹·GP == G — exactly. This is why
+    the certifier may bound the *composed* transformed stages with the
+    canonical matrices in every base."""
+    can = exact_matrices(m, 3, "canonical")
+    leg = exact_matrices(m, 3, "legendre")
+    assert np.array_equal(leg["BPT"].dot(leg["CinvT"]), can["BT"])
+    assert np.array_equal(leg["APT"].dot(leg["CinvT"]), can["AT"])
+    assert np.array_equal(leg["Cinv"].dot(leg["GP"]), can["G"])
+
+
+@pytest.mark.parametrize("m,base", [(m, b) for m in (2, 4, 6)
+                                    for b in ("canonical", "legendre")])
+def test_amplification_factors_exact(m, base):
+    amp = amplifications(m, 3, base)
+    M = exact_matrices(m, 3, base)
+    assert amp["BT"] == max_row_l1(M["BT"])
+    assert amp["input_composed"] == max_row_l1(M["BT"]) ** 2
+    assert all(isinstance(v, Fraction) for v in amp.values())
+    if base == "canonical":
+        assert amp["input_staged"] == amp["input_composed"]
+    else:
+        # the changed base pays a strictly larger *staged* bound — the
+        # per-stage growth the paper's base change trades against
+        # smaller matrix entries elsewhere
+        assert amp["input_staged"] >= amp["input_composed"]
+
+
+# ---------------------------------------------------------------------------
+# soundness: random executions stay under the certified bounds
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(data=st.data(),
+                  m=st.sampled_from([2, 4, 6]),
+                  base=st.sampled_from(["canonical", "legendre"]))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_random_inputs_never_exceed_stage_bounds(data, m, base):
+    rep = certify_config(m, 3, base, 9, cin=8)
+    n = m + 2
+    M = exact_matrices(m, 3, base)
+    BT = to_float(M["BT"])
+    G = to_float(M["G"])
+    x = np.asarray(data.draw(
+        _hy_arrays((n, n), 1.0)), np.float64)
+    w = np.asarray(data.draw(
+        _hy_arrays((3, 3), 1.0)), np.float64)
+
+    v = BT @ x @ BT.T
+    assert np.abs(v).max() <= float(rep.stage("input_transformed").bound) \
+        * (1 + 1e-9)
+    u = G @ w @ G.T
+    assert np.abs(u).max() <= float(rep.stage("weight_transformed").bound) \
+        * (1 + 1e-9)
+    if base != "canonical":
+        cinvt = to_float(M["CinvT"])
+        mid = cinvt @ x @ cinvt.T
+        assert np.abs(mid).max() <= \
+            float(rep.stage("input_base_change").bound) * (1 + 1e-9)
+
+
+@hypothesis.given(cin=st.integers(1, 64), seed=st.integers(0, 2 ** 16))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_random_accumulator_within_bound(cin, seed):
+    rng = np.random.RandomState(seed)
+    xq = rng.randint(-127, 128, size=(4, cin)).astype(np.int64)
+    uq = rng.randint(-127, 128, size=(cin, 4)).astype(np.int64)
+    acc = xq @ uq
+    assert np.abs(acc).max() <= max_abs_accumulator(cin)
+    rep = certify_config(4, 3, "legendre", 9, cin)
+    assert int(rep.stage("gemm_accumulator").bound) == \
+        max_abs_accumulator(cin)
+
+
+@pytest.mark.parametrize("m,base", [(2, "canonical"), (4, "legendre"),
+                                    (6, "legendre")])
+def test_seeded_random_executions_within_bounds(m, base):
+    """Non-hypothesis randomized soundness sweep (runs on minimal CI
+    images where the property tests skip)."""
+    rep = certify_config(m, 3, base, 9, cin=16)
+    M = exact_matrices(m, 3, base)
+    BT, G = to_float(M["BT"]), to_float(M["G"])
+    n = m + 2
+    bound_v = float(rep.stage("input_transformed").bound)
+    bound_u = float(rep.stage("weight_transformed").bound)
+    for seed in range(50):
+        rng = np.random.RandomState(seed)
+        x = rng.uniform(-1, 1, (n, n))
+        w = rng.uniform(-1, 1, (3, 3))
+        assert np.abs(BT @ x @ BT.T).max() <= bound_v * (1 + 1e-9)
+        assert np.abs(G @ w @ G.T).max() <= bound_u * (1 + 1e-9)
+        xq = rng.randint(-127, 128, (8, 16)).astype(np.int64)
+        uq = rng.randint(-127, 128, (16, 8)).astype(np.int64)
+        assert np.abs(xq @ uq).max() <= \
+            int(rep.stage("gemm_accumulator").bound)
+
+
+def _hy_arrays(shape, amax):
+    return st.lists(
+        st.floats(-amax, amax, allow_nan=False, width=64),
+        min_size=int(np.prod(shape)), max_size=int(np.prod(shape))
+    ).map(lambda v: np.array(v).reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# tightness: adversarial constructions attain the bounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,base", [(2, "canonical"), (4, "legendre"),
+                                    (6, "canonical"), (6, "legendre")])
+def test_sign_aligned_input_attains_transform_bound_exactly(m, base):
+    """Barabasz et al.'s worst case, in exact arithmetic: X_jk =
+    sign(BT[i*,j])·sign(BT[i*,k]) drives (BT X BTᵀ)[i*,i*] to the
+    certified bound with NO slack."""
+    M = exact_matrices(m, 3, base)
+    BT = M["BT"]
+    norms = row_l1_norms(BT)
+    i = int(np.argmax([float(v) for v in norms]))
+    sgn = [Fraction(1) if BT[i, j] >= 0 else Fraction(-1)
+           for j in range(BT.shape[1])]
+    X = np.empty(BT.shape, dtype=object)
+    for j in range(BT.shape[0]):
+        for k in range(BT.shape[1]):
+            X[j, k] = sgn[j] * sgn[k]
+    V = BT.dot(X).dot(BT.T)
+    bound = certify_config(m, 3, base, 9, 8).stage("input_transformed").bound
+    assert V[i, i] == bound          # exact rational equality
+    # and the fp64 execution comes within rounding of it
+    v_f = to_float(BT) @ to_float(X) @ to_float(BT).T
+    assert v_f[i, i] == pytest.approx(float(bound), rel=1e-12)
+
+
+def test_saturated_operands_attain_accumulator_bound_exactly():
+    cin = 96
+    xq = np.full((1, cin), 127, np.int32)
+    uq = np.full((cin, 1), 127, np.int32)
+    acc = (xq.astype(np.int64) @ uq.astype(np.int64))[0, 0]
+    assert acc == max_abs_accumulator(cin) \
+        == int(certify_config(4, 3, "legendre", 9, cin)
+               .stage("gemm_accumulator").bound)
+    # sign-flipping half the operands still attains it (alignment, not
+    # saturation polarity, is what the bound requires)
+    s = np.resize([1, -1], cin)
+    acc2 = int(((127 * s).astype(np.int64) * (127 * s)).sum())
+    assert acc2 == max_abs_accumulator(cin)
+
+
+# ---------------------------------------------------------------------------
+# verdict boundaries and the served sweep
+# ---------------------------------------------------------------------------
+
+def test_int32_verdict_flips_exactly_at_the_limit():
+    cin_max = INT32_ACC_LIMIT // 127 ** 2
+    assert certify_config(6, 3, "canonical", 8, cin_max).int32_safe
+    assert not certify_config(6, 3, "canonical", 8, cin_max + 1).int32_safe
+
+
+def test_hadamard_verdict_flips_exactly_at_fp32_exact_limit():
+    cin_max = FP32_EXACT_INT_LIMIT // 127 ** 2
+    ok = certify_config(4, 3, "legendre", 9, cin_max)
+    bad = certify_config(4, 3, "legendre", 9, cin_max + 1)
+    assert ok.hadamard_safe and ok.proved
+    assert bad.int32_safe and not bad.hadamard_safe and not bad.proved
+
+
+@pytest.mark.parametrize("m,base,bits", SERVED)
+def test_every_served_config_is_proved(m, base, bits):
+    for cin in (64, 128, 256, 512):        # ResNet18 channel widths
+        rep = certify_config(m, 3, base, bits, cin)
+        assert rep.proved, rep.summary()
+        assert rep.stage("input_quantized").bound == 127
+        assert rep.stage("gemm_accumulator").dtype == "int32"
+
+
+def test_negative_control_is_refused():
+    nc = NEGATIVE_CONTROL
+    rep = certify_config(nc["m"], nc["r"], nc["base"],
+                         nc["hadamard_bits"], nc["cin"])
+    assert not rep.int32_safe and not rep.proved
+
+
+def test_committed_report_matches_recomputation():
+    committed = json.loads((REPO / "ANALYSIS_ranges.json").read_text())
+    assert committed == build_report(), \
+        "ANALYSIS_ranges.json is stale — `make certify-write` and commit"
+
+
+def test_report_is_jsonable_and_summarizes():
+    rep = certify_config(6, 3, "legendre", 9, 512)
+    d = json.loads(json.dumps(rep.to_dict()))
+    assert d["proved"] and d["config"]["cin"] == 512
+    names = [s["name"] for s in d["stages"]]
+    assert names.index("input_base_change") < names.index("input_transformed")
+    assert "PROVED" in rep.summary()
+    assert rep.stage("hadamard_requant").dtype == "int16"   # 9-bit grid
+
+
+def test_invalid_configs_raise():
+    with pytest.raises(ValueError):
+        certify_config(4, 3, "hexagonal", 9, 64)
+    with pytest.raises(ValueError):
+        certify_config(4, 3, "legendre", 1, 64)
+    with pytest.raises(ValueError):
+        certify_config(4, 3, "legendre", 9, 0)
+
+
+# ---------------------------------------------------------------------------
+# the ConvEngine pack-time gate
+# ---------------------------------------------------------------------------
+
+def _engine(spec_kw, **kw):
+    from repro.conv import ConvEngine, ConvPolicy
+    from repro.core.winograd import WinogradSpec
+    return ConvEngine(WinogradSpec(**spec_kw),
+                      ConvPolicy(backend="winograd_int8"), **kw)
+
+
+def test_engine_refuses_unprovable_config_in_error_mode():
+    eng = _engine(dict(m=6, r=3, base="canonical"), hadamard_bits=8,
+                  certify="error")
+    w = jnp.zeros((3, 3, NEGATIVE_CONTROL["cin"], 1), jnp.float32)
+    with pytest.raises(ValueError, match="UNSAFE"):
+        eng.prepare_layer("big", w)
+    assert "big" not in eng.packed
+
+
+def test_engine_warns_by_default_and_off_is_silent():
+    import warnings
+    w = jnp.zeros((3, 3, NEGATIVE_CONTROL["cin"], 1), jnp.float32)
+    eng = _engine(dict(m=6, r=3, base="canonical"), hadamard_bits=8)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert eng.prepare_layer("big", w)      # packed, but warned
+    assert any(issubclass(r.category, RuntimeWarning) for r in rec)
+    eng_off = _engine(dict(m=6, r=3, base="canonical"), hadamard_bits=8,
+                      certify="off")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert eng_off.prepare_layer("big", w)
+    assert not rec
+
+
+def test_engine_gate_passes_served_configs():
+    eng = _engine(dict(m=4, r=3, base="legendre"), hadamard_bits=9,
+                  certify="error")
+    w = jnp.asarray(np.random.RandomState(0)
+                    .randn(3, 3, 32, 16).astype(np.float32))
+    assert eng.prepare_layer("l", w)
+
+def test_engine_rejects_bad_certify_knob():
+    with pytest.raises(ValueError, match="certify"):
+        _engine(dict(m=4, r=3, base="legendre"), certify="maybe")

@@ -82,3 +82,49 @@ def test_quant_config_off():
     q = QuantConfig.off()
     assert q.act_bits is None and q.hadamard_bits is None and \
         q.matrix_bits is None
+
+
+# ---------------------------------------------------------------------------
+# storage_dtype / quantize_int narrowing contract (the range certifier's
+# stage-boundary dtypes — repro.analysis.ranges)
+# ---------------------------------------------------------------------------
+
+def test_storage_dtype_ladder():
+    from repro.core.quantization import storage_dtype
+    assert storage_dtype(2) == jnp.int8
+    assert storage_dtype(8) == jnp.int8
+    assert storage_dtype(9) == jnp.int16
+    assert storage_dtype(16) == jnp.int16
+    assert storage_dtype(17) == jnp.int32
+    assert storage_dtype(32) == jnp.int32
+    with pytest.raises(ValueError):
+        storage_dtype(1)
+    with pytest.raises(ValueError):
+        storage_dtype(33)
+
+
+def test_quantize_int_explicit_narrow_dtype_raises():
+    # The historical behavior silently widened bits=9, dtype=int8 to
+    # int16 behind the caller's explicit request; narrowing is now an
+    # error, never a surprise.
+    x = jnp.linspace(-1, 1, 64)
+    with pytest.raises(ValueError, match="9-bit"):
+        quantize_int(x, 9, dtype=jnp.int8)
+    with pytest.raises(ValueError, match="17-bit"):
+        quantize_int(x, 17, dtype=jnp.int16)
+
+
+def test_quantize_int_explicit_wide_dtype_respected():
+    x = jnp.linspace(-1, 1, 64)
+    q, _ = quantize_int(x, 8, dtype=jnp.int32)
+    assert q.dtype == jnp.int32
+    assert int(jnp.abs(q).max()) <= 127
+
+
+def test_quantize_int_default_dtype_tracks_storage_dtype():
+    from repro.core.quantization import storage_dtype
+    x = jnp.linspace(-1, 1, 64)
+    for bits in (4, 8, 9, 12, 16, 20):
+        q, _ = quantize_int(x, bits)
+        assert q.dtype == storage_dtype(bits), bits
+        assert int(jnp.abs(q).max()) <= qmax(bits)
