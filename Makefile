@@ -2,11 +2,27 @@
 
 PY ?= python
 
+# Coverage floor over the conv subsystem (planner, engine, packing,
+# policy, autotune): enforced when pytest-cov is importable (CI always
+# has it — see .github/workflows/ci.yml), silently skipped otherwise so
+# a bare local checkout still runs tier-1 unchanged.
+COV := $(shell $(PY) -c "import pytest_cov" 2>/dev/null && echo \
+	"--cov=repro.conv --cov-report=term --cov-report=xml \
+	--cov-fail-under=85")
+
 .PHONY: verify quickstart lint certify certify-write bench-kernels \
-	bench-smoke bench-serve-smoke serve-int8 serve-online
+	bench-smoke bench-serve-smoke serve-int8 serve-online fuzz
 
 verify:
-	PYTHONPATH=src $(PY) -m pytest -x -q
+	PYTHONPATH=src $(PY) -m pytest -x -q $(COV)
+
+# The ≥200-case differential parity sweep (tests/test_differential.py):
+# deterministic seeded generation, so any failure names a regenerable
+# case. The tier-1 run already includes the 8-case seeded subset; this
+# is the local/nightly bulk pass. REPRO_FUZZ_CASES overrides the count.
+fuzz:
+	REPRO_FUZZ_CASES=$${REPRO_FUZZ_CASES:-200} PYTHONPATH=src \
+		$(PY) -m pytest tests/test_differential.py -q
 
 # Repo-specific static hazard linter (repro.analysis.lint): jit arg-flavor
 # mixing, cached array args, unsynced timing windows, library->harness

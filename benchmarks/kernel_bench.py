@@ -173,6 +173,7 @@ def main(argv=None):
     f63_bench(smoke=args.smoke)
     autotune_bench(smoke=args.smoke)
     sharded_bench(smoke=args.smoke)
+    plan_bench(smoke=args.smoke)
     write_json(args.json, smoke=args.smoke,
                backend=jax.default_backend(),
                note="interpret-mode Pallas on CPU; TPU numbers from the "
@@ -424,6 +425,49 @@ def sharded_bench(smoke: bool = False):
             emit(f"engine_winograd_int8_sharded_fused_{d}dev_{tag}", us,
                  "tile-axis shard_map, fused kernel per slab",
                  shape=tag, devices=d)
+
+
+def plan_bench(smoke: bool = False):
+    """Planner outcome rows: the measured per-layer plan vs the direct
+    fallback on the same layer menu (``repro.conv.planner``).
+
+    One row pair per layer geometry: ``plan_planned_<tag>`` is the wall
+    of the config the solver picked for that layer — measured on the
+    exact prepared serving path the plan will dispatch — and
+    ``plan_direct_<tag>`` is the always-feasible exact fallback of the
+    same geometry, which doubles as the per-tag normalizer the trend
+    gate divides by (``benchmarks.trend_check.PLAN_ROW``). The solver
+    re-runs on every bench invocation over a restricted candidate grid
+    (CI-sized; the full grid is the launcher's default), so these rows
+    gate the planner's *outcome* — the planned wall must never regress
+    against its committed self — not a frozen choice. By construction
+    planned ≤ direct (direct is always a feasible candidate and the
+    solver is an argmin), asserted here so a solver regression fails
+    the bench run itself, before the trend gate.
+    """
+    from repro.conv import LayerGeom, build_plan, plan_cost_us
+
+    geoms = [LayerGeom("p_small", (2, 8, 8, 8), 8)]
+    if not smoke:
+        geoms.append(LayerGeom("p_mid", (2, 16, 16, 16), 16))
+    plan, costs = build_plan(geoms, tile_sizes=(2, 4),
+                             bases=("legendre",), hadamard_bits=(9,),
+                             iters=3, warmup=1)
+    for g in geoms:
+        B, H, W, Ci = g.x_shape
+        tag = f"{B}x{H}x{W}x{Ci}->{g.cout}"
+        table = costs[g.layer]
+        won = next(c for c in table if c.entry == plan.get(g.layer))
+        direct = next(c for c in table if not c.entry.is_winograd)
+        assert won.us <= direct.us, (won, direct)
+        emit(f"plan_planned_{tag}", won.us,
+             f"solver pick: {won.entry.describe()}", shape=tag,
+             rel_err=round(won.rel_err, 5))
+        emit(f"plan_direct_{tag}", direct.us,
+             "exact fallback; per-tag normalizer", shape=tag)
+    print(f"# plan_bench: total planned wall "
+          f"{plan_cost_us(plan, costs):.0f}us over {len(geoms)} layers "
+          f"— {plan.describe()}")
 
 
 if __name__ == "__main__":

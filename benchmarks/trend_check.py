@@ -9,7 +9,7 @@ more than ``--tol`` (default 20%) slower than its committed counterpart
 fails CI — closing the ROADMAP "BENCH trajectory" loop with an actual
 gate instead of an artifact upload.
 
-Two row families are gated, each with its own per-shape normalizer:
+Three row families are gated, each with its own per-shape normalizer:
 
 * **pipeline rows** (``engine_winograd_int8_prepared_<fused|staged>_*``)
   normalized by the dynamic-int8 row of the same shape;
@@ -18,7 +18,10 @@ Two row families are gated, each with its own per-shape normalizer:
   serve-each-request-alone row of the same tag (``serve_solo_<tag>``) —
   "p99 in units of a lone request's service time", which cancels
   machine speed while still catching real regressions in coalescing,
-  padding or dispatch.
+  padding or dispatch;
+* **planner outcome rows** (``plan_planned_<tag>`` from
+  ``kernel_bench.plan_bench``) normalized by the direct exact-fallback
+  row of the same geometry (``plan_direct_<tag>``).
 
 Cross-machine noise: absolute interpret-mode wall-times differ between
 the machine that committed the baseline and the CI runner, so a row
@@ -59,10 +62,19 @@ DYNAMIC_ROW = "engine_winograd_int8_{tag}"
 SERVE_ROW = re.compile(r"^serve_(p50|p99)_(?P<load>[^_]+)_(?P<tag>.+)$")
 SOLO_ROW = "serve_solo_{tag}"
 
+#: Planner outcome rows (benchmarks.kernel_bench.plan_bench): the
+#: per-layer plan's measured serving wall, normalized per tag by the
+#: direct exact-fallback row of the same geometry — "planned wall in
+#: units of the direct conv", which cancels machine speed and gates
+#: the solver's outcome rather than any frozen algorithm choice.
+PLAN_ROW = re.compile(r"^plan_planned_(?P<tag>.+)$")
+PLAN_DIRECT_ROW = "plan_direct_{tag}"
+
 #: (row pattern, normalizer-name template formatted with the match's
 #: named groups). All gated the same way: us_per_call, lower is better,
 #: fail only when raw AND normalized both regress.
-GATES = ((PIPELINE_ROW, DYNAMIC_ROW), (SERVE_ROW, SOLO_ROW))
+GATES = ((PIPELINE_ROW, DYNAMIC_ROW), (SERVE_ROW, SOLO_ROW),
+         (PLAN_ROW, PLAN_DIRECT_ROW))
 
 
 def load_committed(ref: str):

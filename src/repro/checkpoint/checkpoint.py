@@ -26,7 +26,7 @@ import jax
 import ml_dtypes
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "Checkpointer"]
+__all__ = ["save", "restore", "peek_leaves", "latest_step", "Checkpointer"]
 
 _SEP = "/"
 
@@ -133,6 +133,41 @@ def restore(directory: str, tree_like: Any, step: Optional[int] = None,
         new_leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
                           else arr)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+def peek_leaves(directory: str, step: Optional[int] = None,
+                prefix: str = "", process_suffix: str = ""
+                ) -> dict[str, np.ndarray]:
+    """Read a checkpoint's raw leaves without a restore template.
+
+    Returns ``{slash-joined path: np.ndarray}`` for every stored leaf
+    whose path starts with ``prefix`` (empty prefix = all). This is the
+    template-free escape hatch for *self-describing* state groups — a
+    restore template normally comes from an engine that already knows
+    its schema, but e.g. the per-layer serving plan
+    (``repro.conv.planner.Plan.from_checkpoint``) must be decodable
+    from the checkpoint alone, because the plan is what *defines* the
+    engine that will restore the rest. An absent/empty prefix group
+    returns ``{}`` (pre-plan checkpoints stay readable). bf16 leaves
+    are re-viewed through the manifest dtype like ``restore``.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    base = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(base, f"arrays{process_suffix}.npz"))
+    with open(os.path.join(base, "MANIFEST.json")) as f:
+        dtypes = json.load(f).get("dtypes", {})
+    out = {}
+    for key in data.files:
+        if not key.startswith(prefix):
+            continue
+        arr = data[key]
+        if dtypes.get(key) == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        out[key] = arr
+    return out
 
 
 class Checkpointer:

@@ -1,10 +1,15 @@
 """Unified convolution subsystem: backend dispatch, offline weight
-packing, scale calibration (see ``repro.conv.engine`` for the full
-backend matrix and prepare/execute lifecycle)."""
+packing, scale calibration, and the measured per-layer algorithm
+planner (see ``repro.conv.engine`` for the full backend matrix and
+prepare/execute lifecycle, ``repro.conv.planner`` for plan
+construction)."""
 from repro.conv.engine import ConvEngine
 from repro.conv.packing import (PackedWinogradWeights, merge_abs_max,
                                 observed_abs_max, pack_weights,
                                 scales_from_abs_max)
+from repro.conv.planner import (CandidateCost, LayerGeom, Plan, PlanEntry,
+                                build_plan, candidate_entries,
+                                measure_layer, plan_cost_us, solve_plan)
 from repro.conv.policy import BACKENDS, ConvPolicy
 
 __all__ = [
@@ -16,4 +21,13 @@ __all__ = [
     "observed_abs_max",
     "merge_abs_max",
     "scales_from_abs_max",
+    "Plan",
+    "PlanEntry",
+    "LayerGeom",
+    "CandidateCost",
+    "candidate_entries",
+    "measure_layer",
+    "solve_plan",
+    "build_plan",
+    "plan_cost_us",
 ]

@@ -25,6 +25,17 @@ identically-shaped layers times each shape once.
 
 Numerics are block-independent (asserted in tests): the tuner changes
 wall-time only, never output bytes.
+
+Under a per-layer algorithm plan (``repro.conv.planner``) the tuner
+composes orthogonally: the plan decides each layer's *spec* — tile
+size, base, Hadamard grid — and the tuner then searches the block
+split for exactly that spec's P and the layer's tile geometry (the
+engine resolves ``_layer_spec(layer)`` before calling in, so two
+layers planned onto different tile sizes tune independent grids and
+the per-(spec, shape) memo keeps them apart). Plan and blocks ride
+the same checkpoint: re-planning invalidates nothing the tuner cached
+for specs that survived, because the memo key already contains the
+spec.
 """
 from __future__ import annotations
 

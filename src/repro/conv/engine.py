@@ -145,7 +145,8 @@ class ConvEngine:
                  blocks: Optional[tuple] = None,
                  autotune: bool = False,
                  autotune_opts: Optional[dict] = None,
-                 certify: str = "warn"):
+                 certify: str = "warn",
+                 plan: "Optional[object]" = None):
         """``hadamard_bits``: the int8 backend's 8/9-bit Hadamard requant
         stage. The default mirrors the spec's QAT setting
         (``spec.quant.hadamard_bits``) so serving matches what the model
@@ -196,7 +197,23 @@ class ConvEngine:
         an unprovable config, ``"error"`` refuses it (``ValueError``),
         ``"off"`` skips the check. The proof is symbolic (exact-rational
         worst case) and cached per config, so the gate costs microseconds
-        after the first layer."""
+        after the first layer.
+
+        ``plan``: a ``repro.conv.planner.Plan`` mapping layer names to
+        measured per-layer serving configs. A planned layer ignores the
+        policy: ``algorithm="direct"`` serves direct regardless of
+        eligibility, ``"winograd_int8"`` packs and serves with the
+        entry's OWN ``(m, r, base, hadamard_bits)`` — heterogeneous
+        specs coexist in one engine (the engine-wide ``spec``/
+        ``hadamard_bits`` cover only unplanned layers, the policy
+        fallback). The plan rides in ``export_state``/
+        ``state_template``/``import_state`` as a ``plan/<layer>`` leaf
+        group, so a planned checkpoint fully determines routing;
+        restoring a tree that carries a plan adopts it. Because the
+        planner only emits certifier-proved candidates, a plan entry
+        the certifier cannot prove raises at pack time *unconditionally*
+        (``certify`` gates only the unplanned path): a contradicting
+        plan is corrupted state, not a tunable."""
         if spec is None:
             policy = policy or ConvPolicy(backend="direct",
                                           fallback="direct")
@@ -222,6 +239,7 @@ class ConvEngine:
             raise ValueError(f"certify must be 'off', 'warn' or 'error', "
                              f"got {certify!r}")
         self.certify = certify
+        self.plan = plan
         self.autotune = autotune
         self.autotune_opts = dict(autotune_opts or {})
         self.mats = make_matrices(spec) if spec is not None else None
@@ -285,8 +303,41 @@ class ConvEngine:
 
     # -- dispatch -----------------------------------------------------------
 
+    def _plan_entry(self, layer: str):
+        """The layer's PlanEntry, or None (unplanned → policy rules)."""
+        return self.plan.get(layer) if self.plan is not None else None
+
+    def _layer_spec(self, layer: str) -> Optional[WinogradSpec]:
+        """The WinogradSpec serving this layer: its plan entry's own
+        spec when planned winograd, else the engine-wide spec."""
+        e = self._plan_entry(layer)
+        return e.spec() if e is not None and e.is_winograd else self.spec
+
+    def _layer_hbits(self, layer: str) -> Optional[int]:
+        """The 8/9-bit Hadamard requant width serving this layer."""
+        e = self._plan_entry(layer)
+        return (e.hadamard_bits if e is not None and e.is_winograd
+                else self.hadamard_bits)
+
     def backend_for(self, layer: str, *, kernel_size: int, stride: int,
                     in_channels: Optional[int] = None) -> str:
+        e = self._plan_entry(layer)
+        if e is not None:
+            # A plan wins over the policy: it is a measured, certified
+            # per-layer decision (repro.conv.planner). Entries are only
+            # generated inside the Winograd regime, so an out-of-regime
+            # winograd entry is corrupted plan state — refuse loudly
+            # rather than silently falling back (the silent fallback
+            # would serve a config nobody measured).
+            if not e.is_winograd:
+                return "direct"
+            if stride != 1 or kernel_size != e.r:
+                raise ValueError(
+                    f"plan routes layer {layer!r} to {e.describe()} but "
+                    f"the layer is outside that Winograd regime (kernel "
+                    f"{kernel_size}, stride {stride}) — the plan does "
+                    f"not match this model; re-plan")
+            return "winograd_int8"
         r = self.spec.r if self.spec is not None else None
         m = self.spec.m if self.spec is not None else None
         return self.policy.backend_for(layer, kernel_size=kernel_size,
@@ -318,11 +369,13 @@ class ConvEngine:
         """
         pad = padding or self.padding
         pk = self.packed.get(layer)
+        spec = self._layer_spec(layer)
+        hbits = self._layer_hbits(layer)
         if w is None:
-            if pk is None:
+            if pk is None or spec is None:
                 raise ValueError(f"layer {layer!r}: no weights and no "
                                  "prepared state")
-            k, cin = self.spec.r, pk.u_q.shape[1]
+            k, cin = spec.r, pk.u_q.shape[1]
         else:
             k, cin = w.shape[0], w.shape[2]
         backend = self.backend_for(layer, kernel_size=k, stride=stride,
@@ -347,51 +400,50 @@ class ConvEngine:
                 "matrices; flex-trained transforms are not supported — "
                 "serve flex models via winograd_fakequant/winograd_fp")
         if self._calibrating:
-            return self._calibrate_conv(x, w, pk, layer, pad)
+            return self._calibrate_conv(x, w, pk, layer, pad, spec, hbits)
         if pk is not None:
             # Packed weights win over any caller-passed ``w`` (the
             # serving contract — see the docstring); dynamic scales when
             # uncalibrated, e.g. recalibrating a restored engine.
             if (self.mesh is not None and self.fused and pk.calibrated
-                    and (self.hadamard_bits is None
-                         or pk.hadamard_amax is not None)):
+                    and (hbits is None or pk.hadamard_amax is not None)):
                 # Sharded fused serving: tile slabs across the mesh's
                 # data axis, replicated packed weights — same conditions
                 # as the single-device fused path (no dynamic reduction
                 # may be needed), to which it is bit-identical per slab.
-                tiles = _extract(x, self.spec.m, self.spec.r, self.spec.n,
-                                 pad)
-                geom = _geometry(x.shape, self.spec.m, self.spec.r, pad)
+                tiles = _extract(x, spec.m, spec.r, spec.n, pad)
+                geom = _geometry(x.shape, spec.m, spec.r, pad)
                 return execute_int8_sharded(
                     tiles, pk.u_q, pk.w_scales, pk.in_scales,
-                    pk.hadamard_amax, spec=self.spec, geom=geom,
-                    mesh=self.mesh, hadamard_bits=self.hadamard_bits,
+                    pk.hadamard_amax, spec=spec, geom=geom,
+                    mesh=self.mesh, hadamard_bits=hbits,
                     interpret=self.interpret,
                     blocks=self._layer_blocks(pk),
                     data_axis=self.data_axis)
             return winograd_conv2d_int8(
-                x, None, self.spec, pad,
+                x, None, spec, pad,
                 in_scales=pk.in_scales if pk.calibrated else None,
                 u_q=pk.u_q, w_scales=pk.w_scales,
-                hadamard_bits=self.hadamard_bits,
+                hadamard_bits=hbits,
                 h_amax=pk.hadamard_amax if pk.calibrated else None,
                 fused=self.fused, blocks=self._layer_blocks(pk),
                 interpret=self.interpret)
         return winograd_conv2d_int8(
-            x, w, self.spec, pad, hadamard_bits=self.hadamard_bits,
+            x, w, spec, pad, hadamard_bits=hbits,
             fused=self.fused, blocks=self.blocks, interpret=self.interpret)
 
-    def _calibrate_conv(self, x, w, pk, layer, pad):
+    def _calibrate_conv(self, x, w, pk, layer, pad, spec, hbits):
         """One int8 conv under calibration: extract tiles once, record
         input-domain and Hadamard-product maxima, execute with this
-        batch's statistics (bit-identical to the dynamic derivation)."""
+        batch's statistics (bit-identical to the dynamic derivation).
+        ``spec``/``hbits`` are the layer's own (plan-resolved) config."""
         if pk is not None:
             u_q, w_scales = pk.u_q, pk.w_scales
         else:
-            u_q, w_scales = prepare_weights_int8(w, self.spec)
-        tiles = _extract(x, self.spec.m, self.spec.r, self.spec.n, pad)
-        geom = _geometry(x.shape, self.spec.m, self.spec.r, pad)
-        amax = _tiles_abs_max(tiles, self.spec)
+            u_q, w_scales = prepare_weights_int8(w, spec)
+        tiles = _extract(x, spec.m, spec.r, spec.n, pad)
+        geom = _geometry(x.shape, spec.m, spec.r, pad)
+        amax = _tiles_abs_max(tiles, spec)
         self._amax[layer] = merge_abs_max(self._amax.get(layer), amax)
         self._calib_uq[layer] = (u_q, w_scales)
         # Calibration fixes the serving tile geometry — the shape key
@@ -400,12 +452,12 @@ class ConvEngine:
                                   int(u_q.shape[1]), int(u_q.shape[2]))
         blocks = self._layer_blocks(pk)
         scales = scales_from_abs_max(amax)
-        if self.hadamard_bits is None:
-            return execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
+        if hbits is None:
+            return execute_int8(tiles, u_q, w_scales, scales, spec=spec,
                                 geom=geom, hadamard_bits=None,
                                 blocks=blocks, interpret=self.interpret)
-        y, amax_h = execute_int8(tiles, u_q, w_scales, scales, spec=self.spec,
-                                 geom=geom, hadamard_bits=self.hadamard_bits,
+        y, amax_h = execute_int8(tiles, u_q, w_scales, scales, spec=spec,
+                                 geom=geom, hadamard_bits=hbits,
                                  blocks=blocks, interpret=self.interpret,
                                  with_stats=True)
         self._amax_h[layer] = merge_abs_max(self._amax_h.get(layer), amax_h)
@@ -415,10 +467,31 @@ class ConvEngine:
 
     def _certify_layer(self, layer: str, *, cin: int):
         """Pack-time range gate: prove this layer's config safe before
-        its weights are packed (see ``certify`` in ``__init__``)."""
+        its weights are packed (see ``certify`` in ``__init__``).
+
+        A *planned* layer is gated unconditionally — the planner only
+        emits certifier-proved candidates (``candidate_entries``
+        pre-filters), so a plan entry the certifier refuses means the
+        plan is corrupted (hand-edited, stale encoding, wrong model):
+        raise instead of silently serving or falling back, regardless
+        of the ``certify`` knob, which governs only the unplanned
+        policy path.
+        """
+        from repro.analysis.ranges import certify_config
+        e = self._plan_entry(layer)
+        if e is not None and e.is_winograd:
+            rep = certify_config(e.m, e.r, e.base, e.hadamard_bits, cin)
+            if rep.proved:
+                return
+            raise ValueError(
+                f"plan contradicts the range certifier for layer "
+                f"{layer!r}: {e.describe()} at Cin={cin} is "
+                f"{rep.summary()} — the planner only emits proved "
+                f"configs (repro.conv.planner.candidate_entries), so "
+                f"this plan is corrupted or belongs to another model; "
+                f"re-plan instead of overriding")
         if self.certify == "off":
             return
-        from repro.analysis.ranges import certify_config
         rep = certify_config(self.spec.m, self.spec.r, self.spec.base,
                              self.hadamard_bits, cin)
         if rep.proved:
@@ -446,7 +519,7 @@ class ConvEngine:
             return False
         self._certify_layer(layer, cin=w.shape[2])
         old = self.packed.get(layer)
-        new = pack_weights(w, self.spec)
+        new = pack_weights(w, self._layer_spec(layer))
         if (old is not None and old.blocks is not None
                 and old.u_q.shape == new.u_q.shape):
             # Autotuned blocks depend on the (spec, shape) only — they
@@ -568,8 +641,8 @@ class ConvEngine:
             pk = self.packed.get(layer)
             if pk is None:
                 continue
-            res = autotune_blocks(self.spec, *geom,
-                                  hadamard_bits=self.hadamard_bits,
+            res = autotune_blocks(self._layer_spec(layer), *geom,
+                                  hadamard_bits=self._layer_hbits(layer),
                                   interpret=self.interpret,
                                   **self.autotune_opts)
             tuned[layer] = res.blocks
@@ -599,19 +672,35 @@ class ConvEngine:
         missing = [l for l, p in self.packed.items() if not p.calibrated]
         if missing:
             raise ValueError(f"layers not calibrated: {sorted(missing)}")
-        inc = self.hadamard_bits is not None
-        return {"packed": {l: p.to_tree(include_hadamard=inc)
-                           for l, p in self.packed.items()}}
+        state = {"packed": {
+            l: p.to_tree(
+                include_hadamard=self._layer_hbits(l) is not None)
+            for l, p in self.packed.items()}}
+        if self.plan is not None:
+            # The plan group covers EVERY routed layer (direct entries
+            # too): a planned checkpoint fully determines the serving
+            # configuration with no policy consultation on restore.
+            state["plan"] = self.plan.to_tree()
+        return state
 
     def state_template(self) -> dict:
         """Zero-filled tree matching ``export_state`` — the restore
-        skeleton for ``repro.checkpoint.restore`` after ``prepare()``."""
-        def tmpl(p: PackedWinogradWeights) -> dict:
+        skeleton for ``repro.checkpoint.restore`` after ``prepare()``.
+
+        The template carries a ``plan`` group only when this engine
+        holds a plan, so a *pre-plan* checkpoint restores into a
+        plan-less engine without a named-leaf schema error (the policy
+        fallback), while a planned engine round-trips its plan. To
+        serve a planned checkpoint without re-running the planner,
+        recover the plan first with ``planner.Plan.from_checkpoint``
+        and build the engine with it.
+        """
+        def tmpl(l: str, p: PackedWinogradWeights) -> dict:
             P = p.u_q.shape[0]
             zeros = jnp.zeros((P, 1), jnp.float32)
             t = {"u_q": p.u_q, "w_scales": p.w_scales,
                  "in_scales": p.in_scales if p.calibrated else zeros}
-            if self.hadamard_bits is not None:
+            if self._layer_hbits(l) is not None:
                 t["hadamard_amax"] = (p.hadamard_amax
                                         if p.hadamard_amax is not None
                                         else zeros)
@@ -619,13 +708,22 @@ class ConvEngine:
                            else jnp.full((3,), PackedWinogradWeights
                                          .BLOCKS_MISSING, jnp.int32))
             return t
-        return {"packed": {l: tmpl(p) for l, p in self.packed.items()}}
+        state = {"packed": {l: tmpl(l, p) for l, p in self.packed.items()}}
+        if self.plan is not None:
+            state["plan"] = self.plan.to_tree()
+        return state
 
     def import_state(self, tree: dict):
         """Adopt a restored packed+calibrated tree. Under a mesh the
         arrays are first replicated across it (``place_packed_state``) so
-        every device's shard_map slab finds the weights local."""
+        every device's shard_map slab finds the weights local. A tree
+        carrying a ``plan`` group (restored through a planned engine's
+        template) makes the checkpoint authoritative: the decoded plan
+        replaces whatever plan the engine was built with."""
         if self.mesh is not None:
             tree = place_packed_state(self.mesh, tree)
+        if "plan" in tree:
+            from repro.conv.planner import Plan
+            self.plan = Plan.from_tree(tree["plan"])
         self.packed = {l: PackedWinogradWeights.from_tree(sub)
                        for l, sub in tree["packed"].items()}

@@ -39,6 +39,7 @@ __all__ = [
     "merge_abs_max",
     "scales_from_abs_max",
     "PACKED_LEAF_AXES",
+    "PLAN_LEAF_AXES",
     "packed_tree_shardings",
     "place_packed_state",
 ]
@@ -57,6 +58,11 @@ PACKED_LEAF_AXES = {
     "hadamard_amax": ("wino_pos", None),
     "blocks": (None,),          # (3,) autotuned (bm, bn, bk) — replicated
 }
+
+#: Per-layer plan vectors (``repro.conv.planner``) ride the same
+#: state tree under a top-level ``plan`` group — tiny int32 routing
+#: metadata, always replicated.
+PLAN_LEAF_AXES = (None,)
 
 
 @dataclasses.dataclass
@@ -212,6 +218,9 @@ def packed_tree_shardings(mesh, state_tree: dict, rule_map=None) -> dict:
     axes_tree = {"packed": {layer: {name: PACKED_LEAF_AXES[name]
                                     for name in sub}
                             for layer, sub in state_tree["packed"].items()}}
+    if "plan" in state_tree:
+        axes_tree["plan"] = {layer: PLAN_LEAF_AXES
+                             for layer in state_tree["plan"]}
     return tree_shardings(mesh, axes_tree, rule_map,
                           abstract_tree=state_tree)
 

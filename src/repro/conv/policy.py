@@ -6,6 +6,13 @@ The rules that used to live as ad-hoc branches at the call sites
 fallback for everything outside the Winograd regime (strided convs, 1×1
 shortcuts, kernel sizes the spec's F(m, r) does not cover), and optional
 per-layer overrides for mixed-precision deployments.
+
+The policy's hand thresholds (``min_channels``,
+``large_tile_min_channels``) are the *fallback* routing tier: when the
+engine holds a measured per-layer plan (``repro.conv.planner``, built
+at calibration time and carried in checkpoints), planned layers route
+by their plan entry and never consult the policy — the thresholds
+govern only unplanned layers and plan-less engines.
 """
 from __future__ import annotations
 

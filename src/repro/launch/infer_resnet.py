@@ -31,6 +31,14 @@ kernels, end to end:
                  splits the host CPU into N XLA devices for a local
                  multi-device demo (must be set before jax initializes,
                  which this launcher does for you).
+
+``--plan`` inserts stage 0: measure every layer geometry across the
+certifier-proved {direct, F(2,3)/F(4,3)/F(6,3)} × {canonical, legendre}
+× Hadamard-width candidate grid and solve for the per-layer plan
+(``repro.conv.planner``) under the no-added-error-vs-fp budget. The
+plan rides in the checkpoint (recovered template-free via
+``Plan.from_checkpoint`` before serving) and the planned serving wall
+is asserted no worse than the best single-algorithm configuration.
 """
 from __future__ import annotations
 
@@ -60,6 +68,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.checkpoint.checkpoint import restore, save
+from repro.conv import Plan, PlanEntry, build_plan, plan_cost_us
 from repro.core.quantization import QuantConfig
 from repro.core.winograd import WinogradSpec
 from repro.data.pipeline import cifar_batch_at
@@ -89,6 +98,23 @@ def main(argv=None):
                          "block split per layer shape at calibration "
                          "time; the winners ride in the checkpoint and "
                          "an autotuned-vs-default serving row is printed")
+    ap.add_argument("--plan", action="store_true",
+                    help="measure a per-layer algorithm plan "
+                         "(repro.conv.planner) before packing; the plan "
+                         "rides in the checkpoint and a planned-vs-best-"
+                         "single-algorithm serving row is printed")
+    ap.add_argument("--plan-iters", type=int, default=3,
+                    help="timing iterations per plan candidate")
+    ap.add_argument("--plan-tiles", default="2,4,6",
+                    help="comma-separated Winograd output tiles the "
+                         "planner considers (interpret-mode measurement "
+                         "is slow; restrict for quick runs)")
+    ap.add_argument("--plan-bases", default="canonical,legendre",
+                    help="comma-separated polynomial bases the planner "
+                         "considers")
+    ap.add_argument("--plan-bits", default="none,8,9",
+                    help="comma-separated Hadamard widths the planner "
+                         "considers ('none' = fp Hadamard scales)")
     args = ap.parse_args(argv)
     if args.calib_steps < 1:
         ap.error("--calib-steps must be >= 1 (int8 serving needs "
@@ -109,11 +135,37 @@ def main(argv=None):
     params = init_params(RN.param_specs(cfg), jax.random.PRNGKey(0))
     state = init_params(RN.state_specs(cfg), jax.random.PRNGKey(1))
 
-    # 1. pack — offline weight transform + int8 quantization.
+    # 0. plan (optional) — measure the certifier-proved candidate grid
+    # per layer geometry and solve under the no-added-error budget. The
+    # baseline is the exact single-spec config the unplanned engine
+    # would serve, so the plan may trade algorithms but not add error.
+    plan = None
+    if args.plan:
+        baseline = PlanEntry("winograd_int8", m=4, r=3, base=args.base,
+                             hadamard_bits=9)
+        t0 = time.time()
+        plan, plan_costs = build_plan(
+            RN.layer_geoms(cfg, args.batch),
+            baseline=baseline,
+            tile_sizes=tuple(int(t) for t in args.plan_tiles.split(",")),
+            bases=tuple(args.plan_bases.split(",")),
+            hadamard_bits=tuple(None if b.lower() == "none" else int(b)
+                                for b in args.plan_bits.split(",")),
+            iters=args.plan_iters)
+        print(f"[plan] {plan.describe()}; modelled "
+              f"{plan_cost_us(plan, plan_costs) / 1e3:.1f}ms conv/batch "
+              f"({time.time() - t0:.1f}s to plan)")
+        for l, e in sorted(plan.entries.items()):
+            if e.is_winograd:
+                print(f"[plan]   {l}: {e.describe()}")
+
+    # 1. pack — offline weight transform + int8 quantization
+    # (plan-direct layers stay unpacked: direct conv serves fp weights).
     engine = RN.make_engine(cfg, backend="winograd_int8",
                             autotune=args.autotune,
                             autotune_opts=dict(iters=2, warmup=1,
-                                               max_candidates=6))
+                                               max_candidates=6),
+                            plan=plan)
     t0 = time.time()
     packed = engine.prepare(RN.conv_layers(params, cfg))
     print(f"[pack] {len(packed)} conv layers → int8 Winograd domain "
@@ -136,12 +188,19 @@ def main(argv=None):
         print(f"[autotune] {len(tuned)} layers tuned → "
               f"{len(shapes)} distinct block split(s): {shapes}")
 
-    # 3. checkpoint the serving state.
+    # 3. checkpoint the serving state (the plan rides along as the
+    # top-level ``plan`` group — the checkpoint fully determines routing).
     path = save(args.ckpt_dir, 0, engine.export_state())
     print(f"[checkpoint] packed+calibrated state → {path}")
 
-    # 4. serve from the checkpoint with a fresh engine.
-    served = RN.make_engine(cfg, backend="winograd_int8")
+    # 4. serve from the checkpoint with a fresh engine. The plan is
+    # recovered template-free from the checkpoint itself (None for a
+    # pre-plan checkpoint → pure policy routing), because the plan is
+    # what defines which layers the restore template expects packed.
+    plan = Plan.from_checkpoint(args.ckpt_dir)
+    if plan is not None:
+        print(f"[plan] recovered from checkpoint: {plan.describe()}")
+    served = RN.make_engine(cfg, backend="winograd_int8", plan=plan)
     served.prepare(RN.conv_layers(params, cfg))
     tree, step = restore(args.ckpt_dir, served.state_template())
     served.import_state(tree)
@@ -151,11 +210,13 @@ def main(argv=None):
 
     # Same restored state through the staged (three-kernel) pipeline —
     # the bit-identical reference for the fused serving kernel.
-    staged = RN.make_engine(cfg, backend="winograd_int8", fused=False)
+    staged = RN.make_engine(cfg, backend="winograd_int8", fused=False,
+                            plan=plan)
     staged.prepare(RN.conv_layers(params, cfg))
     staged.import_state(tree)
 
-    dyn_engine = RN.make_engine(cfg, backend="winograd_int8")  # no prepare
+    dyn_engine = RN.make_engine(cfg, backend="winograd_int8",  # no prepare
+                                plan=plan)
     fp_engine = RN.make_engine(cfg, backend="winograd_fp")
 
     # Serving runs under jit: the whole forward — tile extraction, the
@@ -219,7 +280,8 @@ def main(argv=None):
         # the tuned per-layer blocks; strip them from a sibling engine
         # to time the spec-default splits on the identical state.
         # Numerics are block-independent, so this is a pure wall row.
-        default_eng = RN.make_engine(cfg, backend="winograd_int8")
+        default_eng = RN.make_engine(cfg, backend="winograd_int8",
+                                     plan=plan)
         default_eng.prepare(RN.conv_layers(params, cfg))
         default_eng.import_state(tree)
         default_eng.clear_tuned_blocks()
@@ -248,6 +310,59 @@ def main(argv=None):
         (f"fused serving adds error over staged vs the fp reference: "
          f"{err_fused:.4f} vs {err_staged:.4f}")
     np.testing.assert_array_less(rel(y_prep, y_fp), 1.0)
+
+    if args.plan:
+        # Planned-vs-best-single-algorithm gate: the planned engine must
+        # serve no slower than the best configuration a single
+        # engine-wide algorithm choice could reach — direct everywhere,
+        # or the F(4,3) config the unplanned engine serves. min-of-3
+        # walls damp shared-machine noise (cf. benchmarks/common).
+        def _wall(fn, n=3):
+            jax.block_until_ready(fn(images))
+            best = float("inf")
+            for _ in range(n):
+                t0 = time.time()
+                jax.block_until_ready(fn(images))
+                best = min(best, time.time() - t0)
+            return best
+
+        t_planned = _wall(prep_fn)
+        direct_eng = RN.make_engine(cfg, backend="direct")
+        y_direct = _logits(params, state, images, cfg, direct_eng)
+        t_direct = _wall(jax.jit(
+            lambda im: _logits(params, state, im, cfg, direct_eng)))
+        single = RN.make_engine(cfg, backend="winograd_int8")
+        single.prepare(RN.conv_layers(params, cfg))
+        with single.calibration():
+            for step in range(args.calib_steps):
+                batch = cifar_batch_at(step, args.batch)
+                _logits(params, state, batch["images"], cfg, single)
+        single_fn = jax.jit(
+            lambda im: _logits(params, state, im, cfg, single))
+        y_single = single_fn(images)
+        t_single = _wall(single_fn)
+        t_best = min(t_direct, t_single)
+        best_nm = "direct" if t_direct <= t_single else "winograd F(4,3)"
+        print(f"[plan] planned {t_planned * 1e3:.0f}ms vs best single "
+              f"algorithm ({best_nm}) {t_best * 1e3:.0f}ms per batch "
+              f"(direct {t_direct * 1e3:.0f}ms, F(4,3) "
+              f"{t_single * 1e3:.0f}ms)")
+        assert t_planned <= t_best * 1.25, \
+            (f"planned serving wall {t_planned * 1e3:.0f}ms exceeds the "
+             f"best single-algorithm configuration {t_best * 1e3:.0f}ms "
+             "beyond timing noise — the plan should never lose to a "
+             "config in its own candidate set")
+        # No-added-error gate, planned vs each single-algorithm config:
+        # the plan trades algorithms under the budget, never accuracy.
+        err_planned = rel(y_prep, y_fp)
+        err_single = rel(y_single, y_fp)
+        err_direct = rel(y_direct, y_fp)
+        print(f"[plan] rel-vs-fp: planned {err_planned:.4f}, single-"
+              f"winograd {err_single:.4f}, direct {err_direct:.4f}")
+        assert err_planned <= max(err_single, err_direct) + 0.05, \
+            (f"planned serving adds error vs the fp reference: "
+             f"{err_planned:.4f} vs single-algorithm "
+             f"{max(err_single, err_direct):.4f}")
 
     # 5. sharded serving: the same checkpoint restored into mesh-backed
     # engines — the tile axis of every int8 conv shards across the

@@ -52,6 +52,7 @@ import numpy as np
 import jax
 
 from repro.checkpoint.checkpoint import restore, save
+from repro.conv import Plan, PlanEntry, build_plan
 from repro.core.quantization import QuantConfig
 from repro.core.winograd import WinogradSpec
 from repro.data.pipeline import cifar_batch_at
@@ -68,10 +69,26 @@ def build_serving_state(args, cfg):
     (params, state, checkpoint tree) the online loop serves from."""
     params = init_params(RN.param_specs(cfg), jax.random.PRNGKey(0))
     state = init_params(RN.state_specs(cfg), jax.random.PRNGKey(1))
+    plan = None
+    if args.plan:
+        # Measure the per-layer algorithm plan on the LARGEST serving
+        # bucket geometry (the throughput-critical shape); the plan
+        # rides the checkpoint into the online engine below.
+        buckets = tuple(int(b) for b in args.buckets.split(","))
+        baseline = PlanEntry("winograd_int8", m=4, r=3, base=args.base,
+                             hadamard_bits=9)
+        plan, _ = build_plan(
+            RN.layer_geoms(cfg, buckets[-1]), baseline=baseline,
+            tile_sizes=tuple(int(t) for t in args.plan_tiles.split(",")),
+            bases=tuple(args.plan_bases.split(",")),
+            hadamard_bits=tuple(None if b.lower() == "none" else int(b)
+                                for b in args.plan_bits.split(",")))
+        print(f"[plan] {plan.describe()}")
     engine = RN.make_engine(cfg, backend="winograd_int8",
                             autotune=args.autotune,
                             autotune_opts=dict(iters=2, warmup=1,
-                                               max_candidates=6))
+                                               max_candidates=6),
+                            plan=plan)
     packed = engine.prepare(RN.conv_layers(params, cfg))
     print(f"[pack] {len(packed)} conv layers → int8 Winograd domain")
     with engine.calibration():
@@ -104,7 +121,15 @@ def make_served_engine(args, cfg, template):
         d = min(args.mesh_devices, ndev)
         mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
         print(f"[mesh] serving across {d} device(s), tile-axis shard_map")
-    engine = RN.make_engine(cfg, backend="winograd_int8", mesh=mesh)
+    # The plan (if the checkpoint carries one) is recovered template-
+    # free first: it defines which layers the restore template expects
+    # packed, so the engine must know it before import (None for a
+    # pre-plan checkpoint → pure policy routing, unchanged).
+    plan = Plan.from_checkpoint(args.ckpt_dir)
+    if plan is not None:
+        print(f"[plan] serving the checkpoint's plan: {plan.describe()}")
+    engine = RN.make_engine(cfg, backend="winograd_int8", mesh=mesh,
+                            plan=plan)
     tree, _ = restore(args.ckpt_dir, template)
     engine.import_state(tree)
     return engine
@@ -134,6 +159,20 @@ def main(argv=None):
     ap.add_argument("--autotune", action="store_true",
                     help="tune Pallas block splits at calibration; the "
                          "winners ride the checkpoint into serving")
+    ap.add_argument("--plan", action="store_true",
+                    help="measure a per-layer algorithm plan "
+                         "(repro.conv.planner) before packing; the plan "
+                         "rides the checkpoint into online serving")
+    ap.add_argument("--plan-tiles", default="2,4,6",
+                    help="comma-separated Winograd output tiles the "
+                         "planner considers (restrict for quick runs — "
+                         "interpret-mode measurement is slow)")
+    ap.add_argument("--plan-bases", default="canonical,legendre",
+                    help="comma-separated polynomial bases the planner "
+                         "considers")
+    ap.add_argument("--plan-bits", default="none,8,9",
+                    help="comma-separated Hadamard widths the planner "
+                         "considers ('none' = fp Hadamard scales)")
     ap.add_argument("--mesh-devices", type=int, default=0,
                     help="serve through a data-axis mesh of N devices "
                          "(0 = single device)")

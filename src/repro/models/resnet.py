@@ -21,14 +21,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.conv import ConvEngine, ConvPolicy
+from repro.conv import ConvEngine, ConvPolicy, LayerGeom
 from repro.core.quantization import QuantConfig
 from repro.core.winograd import WinogradSpec, flex_init
 from repro.models.param import ParamSpec
 
 __all__ = ["ResNetConfig", "param_specs", "state_specs", "forward",
-           "loss_fn", "make_engine", "conv_layers", "serving_forward",
-           "NUM_CLASSES"]
+           "loss_fn", "make_engine", "conv_layers", "layer_geoms",
+           "serving_forward", "NUM_CLASSES"]
 
 NUM_CLASSES = 10
 _STAGES = (2, 2, 2, 2)          # ResNet18 basic blocks per stage
@@ -154,7 +154,8 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
                 mesh=None, blocks: Optional[tuple] = None,
                 autotune: bool = False,
                 autotune_opts: Optional[dict] = None,
-                warmup: Optional[tuple] = None) -> ConvEngine:
+                warmup: Optional[tuple] = None,
+                plan=None) -> ConvEngine:
     """Build the config's ConvEngine.
 
     ``backend`` overrides the eligible-conv backend (e.g.
@@ -176,16 +177,23 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
     when the engine already holds its final serving state at build time
     — a restore-from-checkpoint flow should instead call
     ``engine.warmup(...)`` after ``import_state``.
+
+    ``plan`` is a measured per-layer ``repro.conv.planner.Plan``: planned
+    layers route by their plan entry (possibly a different F(m, r)/base/
+    Hadamard width per layer) and the policy's hand thresholds become
+    the fallback for unplanned layers. None (default) keeps pure policy
+    routing — the pre-planner behavior, bit for bit.
     """
     if not cfg.use_winograd or cfg.wino is None:
         eng = ConvEngine(cfg.wino,
-                         ConvPolicy(backend="direct", fallback="direct"))
+                         ConvPolicy(backend="direct", fallback="direct"),
+                         plan=plan)
     else:
         backend = backend or cfg.conv_backend or "winograd_fakequant"
         eng = ConvEngine(cfg.wino, ConvPolicy(backend=backend),
                          fused=fused, interpret=interpret, mesh=mesh,
                          blocks=blocks, autotune=autotune,
-                         autotune_opts=autotune_opts)
+                         autotune_opts=autotune_opts, plan=plan)
     if warmup is not None:
         params, state, geometries = warmup
         eng.serve_fn = serving_forward(params, state, cfg, eng)
@@ -213,6 +221,28 @@ def conv_layers(params, cfg: ResNetConfig):
         yield f"{nm}.conv2", p["conv2"], 1
         if "proj" in p:
             yield f"{nm}.proj", p["proj"], stride
+
+
+def layer_geoms(cfg: ResNetConfig, batch: int,
+                image_hw: int = 32) -> list[LayerGeom]:
+    """Static per-layer geometry of every engine-routed conv — the
+    planner's layer menu (``repro.conv.planner.build_plan``), one
+    ``LayerGeom`` per ``conv_layers`` entry in the same order. Spatial
+    extent halves at every stride-2 block (SAME padding), exactly the
+    shapes ``forward`` feeds the engine."""
+    hw = image_hw
+    geoms = [LayerGeom("stem", (batch, hw, hw, 3), cfg.widths[0])]
+    for nm, cin, cout, stride in _iter_blocks(cfg):
+        hw_out = -(-hw // stride)       # ceil: SAME-padding output extent
+        geoms.append(LayerGeom(f"{nm}.conv1", (batch, hw, hw, cin), cout,
+                               stride=stride))
+        geoms.append(LayerGeom(f"{nm}.conv2", (batch, hw_out, hw_out, cout),
+                               cout))
+        if stride != 1 or cin != cout:
+            geoms.append(LayerGeom(f"{nm}.proj", (batch, hw, hw, cin), cout,
+                                   kernel_size=1, stride=stride))
+        hw = hw_out
+    return geoms
 
 
 def forward(params, state, images, cfg: ResNetConfig, training: bool = False,

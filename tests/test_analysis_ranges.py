@@ -286,3 +286,29 @@ def test_engine_gate_passes_served_configs():
 def test_engine_rejects_bad_certify_knob():
     with pytest.raises(ValueError, match="certify"):
         _engine(dict(m=4, r=3, base="legendre"), certify="maybe")
+
+
+def test_engine_refuses_plan_contradicting_certifier():
+    """A plan entry the certifier refuses must raise AT PACK TIME — even
+    with certify="off" — never silently fall back to policy routing.
+    The planner only emits proved candidates (candidate_entries
+    pre-filters), so a refused entry means the plan is corrupted or was
+    measured for a different model; serving it anyway would run the
+    exact overflow the certifier exists to prevent (regression: the
+    first planner cut routed through backend_for and quietly degraded
+    to the policy path)."""
+    from repro.conv import Plan, PlanEntry
+    nc = NEGATIVE_CONTROL
+    bad = PlanEntry("winograd_int8", m=nc["m"], r=nc["r"], base=nc["base"],
+                    hadamard_bits=nc["hadamard_bits"])
+    plan = Plan({"big": bad, "ok": bad})
+    eng = _engine(dict(m=4, r=3, base="legendre"), hadamard_bits=9,
+                  certify="off", plan=plan)
+    w = jnp.zeros((3, 3, nc["cin"], 1), jnp.float32)
+    with pytest.raises(ValueError, match="contradicts the range certifier"):
+        eng.prepare_layer("big", w)
+    assert "big" not in eng.packed
+    # the SAME entry at a sane Cin is proved and packs — the gate is
+    # about the (config, Cin) pair, not the plan mechanism
+    assert eng.prepare_layer("ok", jnp.zeros((3, 3, 64, 1), jnp.float32))
+    assert "ok" in eng.packed

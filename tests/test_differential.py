@@ -1,0 +1,232 @@
+"""Property-based differential parity fuzzer.
+
+Hand-enumerated parity sweeps (test_fused_serve, test_f63_serving)
+cover the configs we thought of; the per-layer planner multiplies the
+live configuration space, so this module *generates* configurations —
+(spec, base, hadamard_bits, batch geometry, calibration state, input
+scale) tuples — and asserts the tiered parity contract of
+docs/parity.md on every one:
+
+* calibrated vs dynamic scales (same single calibration batch, staged)
+  — **bit-for-bit**;
+* fused ``execute_int8`` vs the sharded path (1-device mesh, the full
+  shard_map machinery) — **bit-identical**;
+* fused vs staged fp32 outputs — ``rtol=atol=1e-4`` (FMA contraction);
+* ``winograd_fp`` vs direct convolution — fp tolerance.
+
+Three entry points share one ``check_parity``:
+
+* a **deterministic seeded subset** (pytest-parametrized, no hypothesis
+  needed) that runs in tier-1 — every case id is ``Case.describe()``,
+  so a failure names its exact config;
+* a **bulk sweep** gated on ``REPRO_FUZZ_CASES=N`` (the ≥200-case local
+  run; deterministic: same N, same cases);
+* a **hypothesis** property (via the optional ``tests/_hypo.py`` seam)
+  that searches the space adversarially and shrinks failures to a
+  minimal counterexample. Reproduce a shrunk case locally by pasting
+  the falsifying ``Case(...)`` into ``check_parity`` — the example
+  budget/deadline come from ``REPRO_FUZZ_EXAMPLES`` (default 25,
+  ``deadline=None``: interpret-mode Pallas compiles are slow).
+"""
+import dataclasses
+import os
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypo import HAVE_HYPOTHESIS, hypothesis, st
+
+from repro.conv import ConvEngine, ConvPolicy
+from repro.core.quantization import QuantConfig
+from repro.core.winograd import WinogradSpec, direct_conv2d
+
+_TILE_POOL = (2, 4, 6)
+_BASE_POOL = ("canonical", "legendre", "chebyshev")
+_BITS_POOL = (None, 8, 9)
+_SCALE_POOL = (0.1, 1.0, 8.0)
+
+#: fp-Winograd-vs-direct tolerance by tile size: the transform
+#: conditioning grows with m (the paper's bit-growth argument), and
+#: F(6,3) canonical rows reach L1 norm 15.
+_FP_TOL = {2: 1e-3, 4: 1e-3, 6: 1e-2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One generated configuration of the full parity surface."""
+
+    m: int
+    base: str
+    bits: Optional[int]
+    batch: int
+    hw: int
+    cin: int
+    cout: int
+    calib_batches: int
+    x_scale: float
+
+    def describe(self) -> str:
+        bits = "fp" if self.bits is None else f"{self.bits}b"
+        return (f"F({self.m},3)-{self.base}-{bits}-b{self.batch}"
+                f"-hw{self.hw}-ci{self.cin}-co{self.cout}"
+                f"-cal{self.calib_batches}-s{self.x_scale}")
+
+    def spec(self) -> WinogradSpec:
+        return WinogradSpec(m=self.m, r=3, base=self.base,
+                            quant=QuantConfig(hadamard_bits=self.bits))
+
+
+def seeded_cases(n: int, seed: int = 20260808) -> list[Case]:
+    """n cases drawn reproducibly from the strategy pools — the same
+    (n, seed) always yields the same list, so failures cite an exact
+    regenerable case."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        out.append(Case(
+            m=int(rng.choice(_TILE_POOL)),
+            base=str(rng.choice(_BASE_POOL)),
+            bits=_BITS_POOL[int(rng.integers(len(_BITS_POOL)))],
+            batch=int(rng.integers(1, 3)),
+            hw=int(rng.integers(4, 13)),
+            cin=int(rng.choice((3, 4, 8))),
+            cout=int(rng.choice((2, 4, 8))),
+            calib_batches=int(rng.integers(1, 3)),
+            x_scale=float(rng.choice(_SCALE_POOL)),
+        ))
+    return out
+
+
+def _operands(case: Case):
+    # zlib.crc32, not hash(): str hashing is salted per process, and a
+    # fuzzer's counterexamples must reproduce across runs.
+    kx = jax.random.PRNGKey(zlib.crc32(case.describe().encode()))
+    x = jax.random.normal(kx, (case.batch, case.hw, case.hw, case.cin),
+                          jnp.float32) * case.x_scale
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (3, 3, case.cin, case.cout), jnp.float32) * 0.2
+    return x, w
+
+
+def check_parity(case: Case):
+    """Assert every applicable docs/parity.md tier on one case."""
+    spec = case.spec()
+    x, w = _operands(case)
+    calib = [x] + [x * (0.5 + i) for i in range(1, case.calib_batches)]
+
+    # calibrated fused serving state
+    eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                     hadamard_bits=case.bits)
+    eng.prepare([("c", w)])
+    with eng.calibration():
+        for xb in calib:
+            eng.conv2d(xb, None, layer="c")
+    y_fused = np.asarray(eng.conv2d(x, None, layer="c"))
+    assert np.isfinite(y_fused).all(), case.describe()
+
+    # tier: fused == sharded (1-device mesh runs the full shard_map
+    # path), bit-identical on the identical imported state
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sharded = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                         hadamard_bits=case.bits, mesh=mesh)
+    sharded.import_state(eng.export_state())
+    y_sharded = np.asarray(sharded.conv2d(x, None, layer="c"))
+    np.testing.assert_array_equal(y_sharded, y_fused,
+                                  err_msg=case.describe())
+
+    # tier: fused vs staged fp32 output — FMA-contraction rounding only
+    staged = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                        hadamard_bits=case.bits, fused=False)
+    staged.import_state(eng.export_state())
+    y_staged = np.asarray(staged.conv2d(x, None, layer="c"))
+    np.testing.assert_allclose(y_fused, y_staged, rtol=1e-4, atol=1e-4,
+                               err_msg=case.describe())
+
+    # tier: calibrated == dynamic scales, bit-for-bit (staged; only
+    # when the single calibration batch IS the serving batch — more
+    # batches legitimately merge maxima)
+    if case.calib_batches == 1:
+        dyn = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                         hadamard_bits=case.bits, fused=False)
+        y_dyn = np.asarray(dyn.conv2d(x, w, layer="c"))
+        np.testing.assert_array_equal(y_staged, y_dyn,
+                                      err_msg=case.describe())
+
+    # tier: winograd_fp vs direct — fp tolerance by tile size
+    fp = ConvEngine(spec, ConvPolicy(backend="winograd_fp"))
+    y_fp = np.asarray(fp.conv2d(x, w, layer="c"))
+    ref = np.asarray(direct_conv2d(x, w, "same"))
+    denom = float(np.sqrt(np.mean(ref ** 2))) or 1.0
+    rel = float(np.sqrt(np.mean((y_fp - ref) ** 2))) / denom
+    assert rel < _FP_TOL[case.m], (case.describe(), rel)
+
+
+# ---------------------------------------------------------------------------
+# tier-1: deterministic seeded subset (no hypothesis required)
+# ---------------------------------------------------------------------------
+
+_TIER1_CASES = seeded_cases(8)
+
+
+@pytest.mark.parametrize("case", _TIER1_CASES,
+                         ids=[c.describe() for c in _TIER1_CASES])
+def test_differential_parity_seeded(case):
+    check_parity(case)
+
+
+def test_seeded_cases_are_deterministic():
+    a, b = seeded_cases(16), seeded_cases(16)
+    assert a == b
+    assert seeded_cases(16, seed=1) != a
+    # pools are actually exercised
+    assert {c.m for c in seeded_cases(64)} == set(_TILE_POOL)
+    assert {c.base for c in seeded_cases(64)} == set(_BASE_POOL)
+
+
+# ---------------------------------------------------------------------------
+# bulk sweep: REPRO_FUZZ_CASES=200 make fuzz
+# ---------------------------------------------------------------------------
+
+_N_BULK = int(os.environ.get("REPRO_FUZZ_CASES", "0"))
+#: REPRO_FUZZ_SEED shards the sweep: N processes, each a different
+#: seed, cover N×REPRO_FUZZ_CASES distinct cases in parallel.
+_BULK_SEED = int(os.environ.get("REPRO_FUZZ_SEED", "7"))
+
+
+@pytest.mark.skipif(_N_BULK <= 0,
+                    reason="set REPRO_FUZZ_CASES=N to run the bulk sweep")
+@pytest.mark.parametrize("case",
+                         seeded_cases(_N_BULK, seed=_BULK_SEED)
+                         if _N_BULK else [],
+                         ids=lambda c: c.describe())
+def test_differential_parity_bulk(case):
+    check_parity(case)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: adversarial search + shrinking (optional dependency)
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(
+    max_examples=int(os.environ.get("REPRO_FUZZ_EXAMPLES", "25")),
+    deadline=None, derandomize=True)
+@hypothesis.given(
+    m=st.sampled_from(_TILE_POOL),
+    base=st.sampled_from(_BASE_POOL),
+    bits=st.sampled_from(_BITS_POOL),
+    batch=st.integers(min_value=1, max_value=2),
+    hw=st.integers(min_value=4, max_value=12),
+    cin=st.sampled_from((3, 4, 8)),
+    cout=st.sampled_from((2, 4, 8)),
+    calib_batches=st.integers(min_value=1, max_value=2),
+    x_scale=st.sampled_from(_SCALE_POOL),
+)
+def test_differential_parity_hypothesis(m, base, bits, batch, hw, cin,
+                                        cout, calib_batches, x_scale):
+    check_parity(Case(m=m, base=base, bits=bits, batch=batch, hw=hw,
+                      cin=cin, cout=cout, calib_batches=calib_batches,
+                      x_scale=x_scale))

@@ -395,3 +395,66 @@ def test_dryrun_cell_on_test_mesh():
         print("OK", cost.flops)
     """)
     assert "OK" in out
+
+
+def test_planned_checkpoint_restores_into_mesh_engine():
+    """Checkpoint schema growth under a mesh: a heterogeneous per-layer
+    plan (winograd F(2,3)+F(4,3) mixed with a planned-direct layer)
+    rides the checkpoint as the ``plan`` leaf group, is recovered
+    template-free (``Plan.from_checkpoint``) and restored into a
+    2-device mesh engine — serving output bitwise identical to the
+    single-device planned engine for every layer, including the
+    planned-direct one."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.checkpoint.checkpoint import restore, save
+        from repro.conv import ConvEngine, ConvPolicy, Plan, PlanEntry
+        from repro.core.quantization import QuantConfig
+        from repro.core.winograd import WinogradSpec
+        import tempfile
+
+        spec = WinogradSpec(m=4, r=3, base="legendre",
+                            quant=QuantConfig(hadamard_bits=9))
+        plan = Plan({
+            "a": PlanEntry("winograd_int8", m=2, r=3, base="canonical",
+                           hadamard_bits=8),
+            "b": PlanEntry("winograd_int8", m=4, r=3, base="legendre",
+                           hadamard_bits=9),
+            "d": PlanEntry("direct"),
+        })
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 4))
+        ws = {n: jax.random.normal(jax.random.PRNGKey(i + 1),
+                                   (3, 3, 4, 6)) * 0.2
+              for i, n in enumerate("abd")}
+
+        src = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                         plan=plan)
+        src.prepare(ws.items())
+        assert set(src.packed) == {"a", "b"}   # planned-direct unpacked
+        with src.calibration():
+            for n, w in ws.items():
+                src.conv2d(x, w, layer=n)
+        ckpt = tempfile.mkdtemp()
+        save(ckpt, 0, src.export_state())
+        y1 = {n: np.asarray(src.conv2d(x, ws[n], layer=n)) for n in ws}
+
+        got = Plan.from_checkpoint(ckpt)
+        assert got == plan, (got, plan)
+
+        mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+        dst = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                         mesh=mesh, plan=got)
+        dst.prepare(ws.items())
+        tree, _ = restore(ckpt, dst.state_template())
+        dst.import_state(tree)
+        for n in ws:
+            y2 = np.asarray(dst.conv2d(x, ws[n], layer=n))
+            assert np.array_equal(y1[n], y2), n
+        # round-trip the restored engine's state: bitwise stable
+        t2, _ = restore(ckpt, dst.state_template())
+        for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(t2)):
+            assert np.array_equal(np.asarray(l1), np.asarray(l2))
+        print("OK")
+    """)
+    assert "OK" in out
