@@ -52,7 +52,8 @@ bench-kernels:
 # then gates the fused/staged rows against the committed baseline
 # (>20% normalized wall-time regression fails; see benchmarks/trend_check).
 bench-smoke:
-	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench --smoke
+	PYTHONPATH=src:. $(PY) -m benchmarks.kernel_bench --smoke \
+		--host-devices 2
 	PYTHONPATH=src:. $(PY) -m benchmarks.trend_check
 
 # Online-serving SLO benchmark (continuous batching under Poisson

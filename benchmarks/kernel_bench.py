@@ -173,6 +173,7 @@ def main(argv=None):
     f63_bench(smoke=args.smoke)
     autotune_bench(smoke=args.smoke)
     sharded_bench(smoke=args.smoke)
+    tp_bench(smoke=args.smoke)
     plan_bench(smoke=args.smoke)
     write_json(args.json, smoke=args.smoke,
                backend=jax.default_backend(),
@@ -425,6 +426,63 @@ def sharded_bench(smoke: bool = False):
             emit(f"engine_winograd_int8_sharded_fused_{d}dev_{tag}", us,
                  "tile-axis shard_map, fused kernel per slab",
                  shape=tag, devices=d)
+
+
+def tp_bench(smoke: bool = False):
+    """Conv tensor parallelism: wall + per-device packed bytes per mesh
+    split — data-only, model-only and 2-D (data × model) over the same
+    device budget.
+
+    What the splits trade: the data axis shards the tile slab (compute
+    scales, weights replicate — per-device packed bytes stay at 1×);
+    the model axis shards Cout (per-device ``u_q`` bytes drop to
+    1/D_model at the cost of one per-layer all_gather); 2-D buys both.
+    The ``packed_bytes_per_device`` field is *measured* from the placed
+    arrays' addressable shards, not modelled — it is the acceptance
+    number for the weight-memory claim. Like the sharded rows these are
+    topology-dependent and excluded from the trend gate
+    (``benchmarks.trend_check``).
+    """
+    from jax.sharding import Mesh
+
+    from repro.conv.packing import place_packed_state
+
+    spec = WinogradSpec(m=4, r=3, base="legendre",
+                        quant=QuantConfig(hadamard_bits=9))
+    iters = 2 if smoke else 5
+    warmup = 1 if smoke else 2
+    ndev = len(jax.devices())
+    budget = max(d for d in (1, 2, 4) if d <= ndev)
+    splits = sorted({(budget, 1), (1, budget)}
+                    | ({(budget // 2, 2)} if budget >= 4 else set()))
+    for (B, H, W, Ci, Co) in (SMOKE_ENGINE_SHAPES if smoke
+                              else ENGINE_SHAPES[-1:]):
+        tag = f"{B}x{H}x{W}x{Ci}->{Co}"
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, H, W, Ci))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, Ci, Co)) * 0.1
+        for dd, dm in splits:
+            mesh = Mesh(np.array(jax.devices()[:dd * dm]).reshape(dd, dm),
+                        ("data", "model"))
+            ma = "model" if dm > 1 else None
+            eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                             mesh=mesh, model_axis=ma)
+            eng.prepare([("bench", w, 1)])
+            with eng.calibration():
+                eng.conv2d(x, w, layer="bench")
+            placed = place_packed_state(mesh, eng.export_state(),
+                                        model_axis=ma)
+            dev0 = mesh.devices.flat[0]
+            per_dev = sum(
+                next(s.data.nbytes for s in leaf.addressable_shards
+                     if s.device == dev0)
+                for leaf in jax.tree.leaves(placed["packed"]))
+            fn = jax.jit(lambda a, e=eng: e.conv2d(a, None, layer="bench"))
+            us = time_fn(fn, x, warmup=warmup, iters=iters)
+            emit(f"engine_winograd_int8_tp_{dd}x{dm}dev_{tag}", us,
+                 "2-D (data x model) shard_map: tiles x Cout slabs, "
+                 "one model-axis all_gather per layer",
+                 shape=tag, devices=dd * dm, split=f"{dd}x{dm}",
+                 packed_bytes_per_device=int(per_dev))
 
 
 def plan_bench(smoke: bool = False):

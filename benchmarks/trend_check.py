@@ -33,8 +33,9 @@ dynamic row runs hotter inside the full sweep's bloated process than in
 a smoke run, skewing the ratio by >30% while every raw time improved).
 ``--no-normalize`` compares raw µs only.
 
-Sharded rows are excluded — they depend on the device topology of the
-run, not on the code. Autotune rows are excluded too (the tuner's own
+Sharded rows — both the data-only ``…_sharded_fused_<d>dev`` family and
+the 2-D tensor-parallel ``…_tp_<d>x<m>dev`` family — are excluded: they
+depend on the device topology of the run, not on the code. Autotune rows are excluded too (the tuner's own
 argmin is the guarantee; gating them would gate timer noise). Gated
 rows *added* by a PR (a new spec such as F(6,3), a new shape, a new
 serving rate) have no committed counterpart yet: they are reported but

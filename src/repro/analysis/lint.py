@@ -11,7 +11,10 @@ and its post-mortem:
     own entry in jit's C++ fast-path cache and retriggers dispatch work;
     in the serving batcher this silently doubled pre-compiled geometry
     warmup (the PR-6 bucket-executor bug). All call sites of one jitted
-    function should commit to one flavor.
+    function should commit to one flavor. ``shard_map``-wrapped
+    callables (including ``shard_map_compat``) are tracked the same way
+    — the sharded serving executor is exactly such a callable, and its
+    dispatch cache doubles identically.
 
 ``cached-array-args``
     ``functools.lru_cache``/``cache`` (or a memo decorator) on a
@@ -98,16 +101,28 @@ def _dotted(node: ast.AST) -> str:
     return ""
 
 
+_JIT_NAMES = ("jax.jit", "jit", "pjit", "jax.pjit")
+#: Wrappers whose result dispatches like a jitted callable — shard_map
+#: (and this repo's version-compat shim) builds a traced, cached SPMD
+#: program, so mixed numpy/device argument flavors at its call sites
+#: double the dispatch cache exactly like plain jit. Matched on the
+#: trailing name so ``jax.shard_map``, ``jax.experimental.shard_map.
+#: shard_map`` and ``repro.distributed.sharding.shard_map_compat`` all
+#: count.
+_SHARD_MAP_NAMES = ("shard_map", "shard_map_compat")
+
+
 def _is_jit_expr(node: ast.AST) -> bool:
     """Does this decorator/value expression produce a jitted callable?"""
     if isinstance(node, ast.Call):
         name = _dotted(node.func)
-        if name in ("jax.jit", "jit", "pjit", "jax.pjit"):
+        if name in _JIT_NAMES \
+                or name.rsplit(".", 1)[-1] in _SHARD_MAP_NAMES:
             return True
         if name.endswith("partial"):
             return any(_is_jit_expr(a) for a in node.args)
         return False
-    return _dotted(node) in ("jax.jit", "jit", "pjit", "jax.pjit")
+    return _dotted(node) in _JIT_NAMES
 
 
 def _is_cache_expr(node: ast.AST) -> bool:

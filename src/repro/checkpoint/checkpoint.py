@@ -105,8 +105,23 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, tree_like: Any, step: Optional[int] = None,
-            process_suffix: str = "") -> tuple[Any, int]:
-    """Restore into the structure of `tree_like`. Returns (tree, step)."""
+            process_suffix: str = "",
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of `tree_like`. Returns (tree, step).
+
+    Checkpoints store full (gathered) arrays — ``save`` np.asarray's
+    every leaf regardless of how it was sharded in the writing process —
+    so a checkpoint written on ANY mesh restores onto any other:
+    resharding is purely a property of where the restored bytes are
+    placed. Pass ``shardings`` (a pytree of ``jax.sharding.Sharding``
+    congruent to ``tree_like``; ``None`` leaves stay host-side) to
+    device_put each leaf onto its serving placement as it loads —
+    e.g. ``repro.conv.packing.packed_tree_shardings`` for a packed conv
+    state under a (data × model) mesh, which lands every ``u_q``
+    cout-sharded without ever materializing a second full copy on one
+    device. Without ``shardings`` the leaves come back as host numpy
+    and placement happens later (``ConvEngine.import_state``).
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -132,7 +147,15 @@ def restore(directory: str, tree_like: Any, step: Optional[int] = None,
             arr = arr.view(ml_dtypes.bfloat16)
         new_leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
                           else arr)
-    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    if shardings is not None:
+        # Mapped over the shardings tree so a None marks "leave this
+        # whole subtree host-side" (None is a leaf here, not an empty
+        # subtree) while Sharding leaves place their array on load.
+        tree = jax.tree.map(
+            lambda s, sub: sub if s is None else jax.device_put(sub, s),
+            shardings, tree, is_leaf=lambda x: x is None)
+    return tree, step
 
 
 def peek_leaves(directory: str, step: Optional[int] = None,

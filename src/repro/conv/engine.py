@@ -67,15 +67,20 @@ Sharded serving (``mesh=``)
 ===========================
 
 Built with a ``jax.sharding.Mesh``, the engine serves prepared+
-calibrated int8 layers across devices: the Winograd tile axis T is
-sharded over the mesh's data axis (``kernels.ops.execute_int8_sharded``)
-and each device runs the single-pass fused kernel on its tile slab
-against replicated packed weights — only the (T_local, Cout, m, m)
-spatial outputs are gathered. Per-slab arithmetic is untouched, so the
-sharded execution is integer-exact in the Hadamard domain and
-bit-identical at fp32 output across device counts. ``import_state``
-replicates restored state over the mesh; calibration, dynamic-requant
-and ``fused=False`` calls fall back to the single-device pipeline.
+calibrated int8 layers across devices
+(``kernels.ops.execute_int8_sharded``): the Winograd tile axis T is
+sharded over the mesh's data axis, and — when ``model_axis`` names a
+second mesh axis — the packed weights' Cout axis is sharded over it
+(conv tensor parallelism: 1/D_model of the packed bytes per device,
+one all_gather of the (T_local, Cout_local, m, m) spatial outputs per
+layer). Per-element arithmetic is untouched, so the sharded execution
+is integer-exact in the Hadamard domain and bit-identical at fp32
+output across mesh shapes. ``import_state`` places restored state over
+the mesh (replicated statistics, cout-sharded ``u_q``), resharding
+checkpoints written on any other topology. Dynamic-requant layers
+serve sharded too — shard-local abs-max merged by one ``lax.pmax``,
+exactly the single-device derivation; calibration and ``fused=False``
+calls fall back to the single-device pipeline.
 
 A layer re-packed after a weight update keeps its calibrated
 ``in_scales`` (input-only statistic) but drops ``hadamard_amax``
@@ -142,6 +147,7 @@ class ConvEngine:
                  interpret: bool = True,
                  mesh=None,
                  data_axis="data",
+                 model_axis=None,
                  blocks: Optional[tuple] = None,
                  autotune: bool = False,
                  autotune_opts: Optional[dict] = None,
@@ -163,11 +169,18 @@ class ConvEngine:
         calibrated int8 layers then run through
         ``kernels.ops.execute_int8_sharded``: the Winograd tile axis is
         sharded over ``data_axis`` (a mesh axis name or tuple of names)
-        and each device runs the fused kernel on its slab — bit-identical
-        output on any device count. ``import_state`` additionally
-        replicates the restored packed state across the mesh. Layers that
-        cannot take the fused path (uncalibrated, dynamic requant,
-        ``fused=False``, calibration passes) fall back to the
+        and — when ``model_axis`` names a second mesh axis — the packed
+        weights' Cout axis is sharded over it (conv tensor parallelism:
+        each device holds 1/D_model of every layer's packed bytes, runs
+        the fused kernel on its (T/D_data, Cout/D_model) slab, and one
+        per-layer all_gather reassembles the channels). Bit-identical
+        output on any mesh shape. ``import_state`` places the restored
+        packed state accordingly (replicated leaves + cout-sharded
+        ``u_q``), resharding a checkpoint written under any other mesh.
+        Dynamic-requant layers serve sharded too (shard-local abs-max +
+        one ``lax.pmax`` — exactly the single-device derivation);
+        layers that cannot take the sharded path (uncalibrated input
+        scales, ``fused=False``, calibration passes) fall back to the
         single-device pipeline unchanged.
 
         ``blocks``: (bm, bn, bk) Pallas block override reaching both the
@@ -234,6 +247,7 @@ class ConvEngine:
         self.interpret = interpret
         self.mesh = mesh
         self.data_axis = data_axis
+        self.model_axis = model_axis
         self.blocks = validate_blocks(blocks)
         if certify not in ("off", "warn", "error"):
             raise ValueError(f"certify must be 'off', 'warn' or 'error', "
@@ -405,12 +419,14 @@ class ConvEngine:
             # Packed weights win over any caller-passed ``w`` (the
             # serving contract — see the docstring); dynamic scales when
             # uncalibrated, e.g. recalibrating a restored engine.
-            if (self.mesh is not None and self.fused and pk.calibrated
-                    and (hbits is None or pk.hadamard_amax is not None)):
-                # Sharded fused serving: tile slabs across the mesh's
-                # data axis, replicated packed weights — same conditions
-                # as the single-device fused path (no dynamic reduction
-                # may be needed), to which it is bit-identical per slab.
+            if self.mesh is not None and self.fused and pk.calibrated:
+                # Sharded serving: tile slabs across the mesh's data
+                # axis × Cout-sharded weights across its model axis.
+                # Calibrated-requant layers run the fused kernel per
+                # slab (bit-identical to the single-device fused path);
+                # dynamic-requant layers run the staged slab with the
+                # plane abs-max assembled by one pmax — exactly the
+                # single-device dynamic derivation.
                 tiles = _extract(x, spec.m, spec.r, spec.n, pad)
                 geom = _geometry(x.shape, spec.m, spec.r, pad)
                 return execute_int8_sharded(
@@ -419,7 +435,8 @@ class ConvEngine:
                     mesh=self.mesh, hadamard_bits=hbits,
                     interpret=self.interpret,
                     blocks=self._layer_blocks(pk),
-                    data_axis=self.data_axis)
+                    data_axis=self.data_axis,
+                    model_axis=self.model_axis)
             return winograd_conv2d_int8(
                 x, None, spec, pad,
                 in_scales=pk.in_scales if pk.calibrated else None,
@@ -715,13 +732,18 @@ class ConvEngine:
 
     def import_state(self, tree: dict):
         """Adopt a restored packed+calibrated tree. Under a mesh the
-        arrays are first replicated across it (``place_packed_state``) so
-        every device's shard_map slab finds the weights local. A tree
-        carrying a ``plan`` group (restored through a planned engine's
-        template) makes the checkpoint authoritative: the decoded plan
-        replaces whatever plan the engine was built with."""
+        arrays are first placed across it (``place_packed_state``):
+        per-position statistics replicated, and — when the engine has a
+        ``model_axis`` — every ``u_q`` sharded along Cout, so each
+        device's shard_map slab finds exactly its weight shard local.
+        Checkpoints carry full (gathered) arrays, so a state written
+        under ANY mesh shape reshards onto this engine's mesh here. A
+        tree carrying a ``plan`` group (restored through a planned
+        engine's template) makes the checkpoint authoritative: the
+        decoded plan replaces whatever plan the engine was built with."""
         if self.mesh is not None:
-            tree = place_packed_state(self.mesh, tree)
+            tree = place_packed_state(self.mesh, tree,
+                                      model_axis=self.model_axis)
         if "plan" in tree:
             from repro.conv.planner import Plan
             self.plan = Plan.from_tree(tree["plan"])

@@ -46,11 +46,18 @@ __all__ = [
 
 #: Logical axis names of every packed-state leaf (keys of the
 #: ``export_state``/``state_template`` trees), mapped through
-#: ``repro.distributed.sharding.rules`` when serving under a mesh. Tile
-#: sharding replicates all of them: every device consumes the whole
-#: per-position weight tensor against its tile slab, so "cout"/"cin"
-#: stay unsharded ("cout" is the future conv-TP seam) and "wino_pos" is
-#: never sharded.
+#: ``repro.distributed.sharding.rules`` when serving under a mesh.
+#: Data-only (tile-axis) sharding replicates all of them: every device
+#: consumes the whole per-position weight tensor against its tile slab.
+#: Under conv tensor parallelism (``model_axis=``) the "cout" logical
+#: axis — ``u_q``'s trailing dim, the per-position GEMM's N axis — maps
+#: onto the mesh's model axis, so each device holds only its
+#: ``Cout/D_model`` weight shard; the per-position statistics
+#: (``w_scales``/``in_scales``/``hadamard_amax``, shape (n², 1)) have no
+#: Cout dim and stay replicated, as do the tiny ``blocks``/plan leaves.
+#: "cin" (the GEMM K axis) stays unsharded — splitting K would turn the
+#: exact int32 accumulation into a cross-device reduction. "wino_pos"
+#: is never sharded.
 PACKED_LEAF_AXES = {
     "u_q": ("wino_pos", "cin", "cout"),
     "w_scales": ("wino_pos", None),
@@ -204,17 +211,47 @@ def merge_abs_max(running: Optional[jnp.ndarray],
     return new if running is None else jnp.maximum(running, new)
 
 
-def packed_tree_shardings(mesh, state_tree: dict, rule_map=None) -> dict:
+def packed_tree_shardings(mesh, state_tree: dict, rule_map=None,
+                          model_axis=None) -> dict:
     """NamedShardings congruent to an ``export_state`` tree under a mesh.
 
     Each leaf's logical axes come from ``PACKED_LEAF_AXES`` and map
-    through the sharding rules — with the default rules every leaf is
+    through the sharding rules. With the default rules every leaf is
     replicated (tile-axis sharding: the weights ride with every device's
     slab), so a checkpoint exported on one topology restores onto any
-    other unchanged.
+    other unchanged. With ``model_axis`` set (conv tensor parallelism)
+    the "cout" logical axis maps onto that mesh axis instead, so every
+    ``u_q`` leaf lands cout-sharded — 1/D_model of the packed bytes per
+    device — while the per-position statistics stay replicated. Because
+    the rules carry only logical names, the same checkpoint reshards
+    onto ANY mesh shape at restore: the sharding is a property of the
+    serving engine, not of the bytes on disk.
+
+    A ``Cout`` the model-axis extent does not divide is an error, not a
+    silent fallback: the serving executor slices exactly
+    ``Cout/D_model`` columns per device, so replicating such a leaf
+    would desynchronize placement from execution. The error names the
+    offending leaf.
     """
-    from repro.distributed.sharding import rules, tree_shardings
-    rule_map = rule_map or rules(multi_pod="pod" in mesh.axis_names)
+    from repro.distributed.sharding import (axis_extent, rules,
+                                            tree_shardings)
+    tp = model_axis is not None and axis_extent(mesh, model_axis) > 1
+    if rule_map is None:
+        rule_map = rules(multi_pod="pod" in mesh.axis_names, conv_tp=tp)
+        if tp:
+            rule_map["cout"] = model_axis
+    if tp:
+        dm = axis_extent(mesh, model_axis)
+        for layer, sub in state_tree["packed"].items():
+            cout = sub["u_q"].shape[-1]
+            if cout % dm != 0:
+                raise ValueError(
+                    f"packed/{layer}/u_q: Cout={cout} is not divisible "
+                    f"by the mesh's {model_axis!r} axis extent {dm} — "
+                    "conv tensor parallelism shards the per-position "
+                    "GEMM's N axis into equal per-device slabs. Serve "
+                    "this checkpoint on a model axis that divides every "
+                    "layer's Cout (or pad the layer's output channels).")
     axes_tree = {"packed": {layer: {name: PACKED_LEAF_AXES[name]
                                     for name in sub}
                             for layer, sub in state_tree["packed"].items()}}
@@ -225,13 +262,17 @@ def packed_tree_shardings(mesh, state_tree: dict, rule_map=None) -> dict:
                           abstract_tree=state_tree)
 
 
-def place_packed_state(mesh, state_tree: dict, rule_map=None) -> dict:
-    """Device-put a restored packed state onto ``mesh`` (replicated).
+def place_packed_state(mesh, state_tree: dict, rule_map=None,
+                       model_axis=None) -> dict:
+    """Device-put a restored packed state onto ``mesh``.
 
-    A checkpoint restore lands arrays on one device; the sharded serving
-    path replicates the packed weights across the mesh so each device's
-    ``shard_map`` slab finds them local — placing once here instead of
-    re-transferring inside every serving step.
+    A checkpoint restore lands arrays on one device; placing once here
+    instead of re-transferring inside every serving step. Data-only
+    meshes replicate everything (each device's ``shard_map`` slab finds
+    the whole weight tensor local); with ``model_axis`` set every
+    ``u_q`` leaf is *sharded* along Cout over that axis — the conv-TP
+    placement the 2-D serving executor consumes shard-local.
     """
-    shardings = packed_tree_shardings(mesh, state_tree, rule_map)
+    shardings = packed_tree_shardings(mesh, state_tree, rule_map,
+                                      model_axis=model_axis)
     return jax.tree.map(jax.device_put, state_tree, shardings)

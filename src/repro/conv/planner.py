@@ -71,7 +71,8 @@ from repro.core.winograd import WinogradSpec
 __all__ = [
     "PlanEntry", "Plan", "LayerGeom", "CandidateCost",
     "candidate_entries", "measure_layer", "solve_plan", "build_plan",
-    "plan_cost_us", "clear_measure_cache", "PLAN_VEC_LEN",
+    "plan_cost_us", "TP_COLLECTIVE_US", "clear_measure_cache",
+    "PLAN_VEC_LEN",
     "DEFAULT_TILE_SIZES", "DEFAULT_BASES", "DEFAULT_HADAMARD_BITS",
 ]
 
@@ -484,16 +485,55 @@ def solve_plan(costs: Mapping[str, Sequence[CandidateCost]], *,
     return Plan(entries)
 
 
+#: Modelled fixed cost (µs) of the single per-layer model-axis
+#: ``all_gather`` the 2-D TP executor issues — the only collective on
+#: the sharded hot path (one per layer, by construction; see
+#: ``kernels.ops.execute_int8_sharded``). A flat constant, not a
+#: measurement: on the interpret-mode host backend collectives are
+#: memcpy-cheap, and on real interconnects the latency term dominates
+#: at serving-sized (T, Cout, m, m) payloads.
+TP_COLLECTIVE_US = 20.0
+
+
 def plan_cost_us(plan: Plan,
-                 costs: Mapping[str, Sequence[CandidateCost]]) -> float:
-    """Total modelled latency of ``plan`` under a cost table (µs)."""
+                 costs: Mapping[str, Sequence[CandidateCost]], *,
+                 mesh=None, data_axis="data", model_axis=None,
+                 collective_us: float = TP_COLLECTIVE_US) -> float:
+    """Total modelled latency of ``plan`` under a cost table (µs).
+
+    Without ``mesh`` this is the sum of the single-device measured
+    walls. With a mesh the model becomes topology-aware, mirroring how
+    the serving executor actually distributes each algorithm:
+
+    * ``winograd_int8`` layers run the 2-D sharded executor — the GEMM
+      slab shrinks by BOTH axes (tiles over ``data_axis`` × Cout over
+      ``model_axis``), so compute divides by the full device count, and
+      each layer pays one model-axis ``all_gather`` (``collective_us``)
+      iff the model axis is real (extent > 1).
+    * ``direct`` layers are data-parallel only: batch shards over
+      ``data_axis``; the model axis buys them nothing.
+
+    The asymmetry is the point: on a fixed device budget the planner's
+    cost ranking can flip between a data-only and a 2-D mesh — a
+    Winograd candidate that loses single-device can win under TP, which
+    is exactly the crossover a mesh-aware plan exists to find.
+    """
+    from repro.distributed.sharding import axis_extent
+    dd = dm = 1
+    if mesh is not None:
+        dd = axis_extent(mesh, data_axis)
+        dm = axis_extent(mesh, model_axis)
     total = 0.0
     for layer, entry in plan.entries.items():
         cost = next((c for c in costs[layer] if c.entry == entry), None)
         if cost is None:
             raise ValueError(f"layer {layer!r}: plan entry "
                              f"{entry.describe()} not in the cost table")
-        total += cost.us
+        if entry.is_winograd:
+            total += cost.us / (dd * dm) + (collective_us if dm > 1
+                                            else 0.0)
+        else:
+            total += cost.us / dd
     return total
 
 

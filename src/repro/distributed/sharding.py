@@ -24,10 +24,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["rules", "pspec", "named_sharding", "tree_shardings",
            "batch_pspec", "constrain", "shard_map_compat",
-           "data_axis_extent"]
+           "axis_extent", "data_axis_extent"]
 
 
-def rules(fsdp: bool = False, multi_pod: bool = True) -> dict:
+def rules(fsdp: bool = False, multi_pod: bool = True,
+          conv_tp: bool = False) -> dict:
     data_axes = ("pod", "data") if multi_pod else ("data",)
     r = {
         "batch": data_axes,
@@ -46,12 +47,14 @@ def rules(fsdp: bool = False, multi_pod: bool = True) -> dict:
         # Conv-serving logical axes (the int8 Winograd pipeline). "T" is
         # the flattened batch·tile axis of the Winograd domain — it is
         # batch-like, so it shards across the full DP extent (each device
-        # runs the fused serving kernel on its tile slab). "cout" stays
-        # replicated for now: it is the tensor-parallel seam for convs
-        # (shard the per-position GEMM's N axis over "model") once a
-        # single device can no longer hold a layer's packed weights.
+        # runs the fused serving kernel on its tile slab). "cout" is the
+        # conv tensor-parallel seam: the per-position GEMM's N axis,
+        # sharded over "model" so one hot layer's packed weights can
+        # outgrow a single device (``conv_tp=True``; the packed-state
+        # placement only engages it when the serving engine asks — see
+        # ``repro.conv.packing.packed_tree_shardings(model_axis=)``).
         "T": data_axes,
-        "cout": None,
+        "cout": "model" if conv_tp else None,
         "cin": None,
         "wino_pos": None,       # the n² Winograd positions — never sharded
         None: None,
@@ -159,8 +162,30 @@ def constrain(x, mesh: Mesh, *axes):
         x, NamedSharding(mesh, P(*axes)))
 
 
+def axis_extent(mesh: Mesh, name=None) -> int:
+    """Device count along one mesh axis of a (possibly multi-axis) mesh.
+
+    ``name`` is a mesh axis name, a tuple of names (product of extents —
+    e.g. ``("pod", "data")`` on a multi-pod mesh), or ``None`` (extent
+    1, the replicated case). Axes the mesh does not have extent 1 —
+    the same 1-D mesh that serves data-only today reads as a degenerate
+    2-D (D, 1) data×model mesh, so every caller can be written against
+    the general shape.
+    """
+    if name is None:
+        return 1
+    names = name if isinstance(name, (tuple, list)) else (name,)
+    shape = dict(mesh.shape)
+    n = 1
+    for a in names:
+        n *= shape.get(a, 1)
+    return n
+
+
 def data_axis_extent(mesh: Mesh, axis="data") -> int:
-    """Device count along ``axis`` (a name or a tuple of names)."""
+    """Device count along ``axis``; legacy 1-D-era name for
+    ``axis_extent`` (kept for callers of the tile-sharding API). Unlike
+    the general form it raises on an axis the mesh does not have."""
     return _axis_extent(mesh, axis)
 
 

@@ -36,12 +36,15 @@ therefore quantizes identically in all modes (the cross-XLA-program
 drift fixed per docs/parity.md).
 
 Sharded serving (``execute_int8_sharded``): the fused pipeline is
-independent per tile row, so heavy-QPS batches scale past one chip by
-``shard_map``-ing the tile axis T of the quantized ``Xq`` across the
-mesh's data axis — each device runs the fused kernel on its slab
-against replicated packed weights; only the (T_local, Cout, m, m)
-spatial outputs are gathered. Bit-identical to single-device fused
-execution on any device count.
+independent per (tile row, output channel), so it scales past one chip
+over a 2-D (data × model) mesh — the tile axis T of the quantized
+``Xq`` shard_maps across the data axis, the per-position GEMM's N axis
+(Cout) shards across the model axis with each device holding only its
+(P, Cin, Cout/D_model) weight shard, and one per-layer ``all_gather``
+of the small (T_local, Cout_local, m, m) spatial outputs reassembles
+the channels. Bit-identical to single-device fused execution on any
+mesh shape; dynamic-requant layers run sharded too (shard-local
+``|·|max`` + one ``lax.pmax`` over the plane — exact).
 
 Prepare/execute split (the LANCE-style offline/online cut): call
 ``prepare_weights_int8`` once per model to get the per-position int8
@@ -363,52 +366,72 @@ def execute_int8_sharded(tiles: jnp.ndarray, u_q: jnp.ndarray,
                          hadamard_bits: Optional[int],
                          interpret: bool = True,
                          blocks: Optional[tuple] = None,
-                         data_axis="data") -> jnp.ndarray:
-    """Multi-device fused serving: shard the Winograd tile axis T.
+                         data_axis="data",
+                         model_axis=None) -> jnp.ndarray:
+    """Multi-device serving over a 2-D (data × model) mesh: shard the
+    Winograd tile axis T over ``data_axis`` and the per-position GEMM's
+    N axis (Cout) over ``model_axis``.
 
-    The fused hot path is embarrassingly parallel over tiles — every
-    stage past extraction (input transform, per-position GEMM, Hadamard
-    requant, output transform) is independent per tile row, and all
-    weights/scales are per-position statistics shared by every tile. So
-    heavy-QPS batches scale past one chip by slicing the (T, Cin, n, n)
-    tile tensor across the mesh's ``data_axis`` (a name or tuple of
-    names, e.g. ``("pod", "data")``): each device runs the *same*
-    single-pass ``kernels.fused_serve`` kernel on its (T/D)-tile slab
-    against replicated packed weights, and only the small
-    (T_local, Cout, m, m) spatial outputs are gathered for reassembly —
-    the (P, T, Cout) Hadamard plane never crosses the interconnect.
+    The fused hot path is embarrassingly parallel over tiles AND over
+    output channels — every stage past extraction (input transform,
+    per-position GEMM, Hadamard requant, output transform) is
+    independent per (tile row, output channel), and the requant scales
+    are per-position statistics shared by every (t, c) element. So the
+    tensor splits both ways: each device runs the *same* single-pass
+    ``kernels.fused_serve`` kernel on its ``(T/D_data, Cout/D_model)``
+    slab against only its ``(P, Cin, Cout/D_model)`` weight shard —
+    packed bytes per device scale as 1/D_model, which is what lets one
+    hot layer outgrow a single device. Exactly ONE model-axis
+    collective runs per layer: an ``all_gather`` of the small
+    ``(T_local, Cout_local, m, m)`` spatial outputs; the (P, T, Cout)
+    Hadamard plane never crosses the interconnect. ``model_axis=None``
+    (default) is the degenerate D_model = 1 mesh — the PR-3 data-only
+    path, bit for bit.
 
     Numerics: the input quantization runs ONCE on the full tile tensor
     through ``quantize_input`` — the same compile unit every other mode
     dispatches — and only the resulting int8 ``Xq`` is sharded (slicing
     integer data is exact), so "one Xq everywhere" holds by
-    construction. Per-tile arithmetic downstream is untouched (same
-    fused kernel, same operand order, the K grid is not split), so the
-    sharded execution is **integer-exact in the Hadamard domain and
-    bit-identical at fp32 output** to single-device fused execution —
-    both the standalone composition and ``execute_int8(fused=True)``,
-    which now share all compile units — on any device count; asserted in
+    construction. Per-element arithmetic downstream is untouched (same
+    fused kernel, same operand order, the K grid is not split — "cin"
+    never shards), so the sharded execution is **integer-exact in the
+    Hadamard domain and bit-identical at fp32 output** to single-device
+    fused execution on any mesh shape; asserted in
     ``tests/test_distributed.py``.
 
-    Requires the fused path's conditions: the Hadamard stage off, or its
-    statistics calibrated (``h_amax``) — the dynamic requant reduction
-    spans the whole (T, Cout) plane, which per-device slabs cannot see
-    without a cross-device collective on the hot path. ``T`` is
-    zero-padded up to the device count (exact: zero int8 rows produce
-    zero GEMM rows, cropped before reassembly).
+    Dynamic requant (``hadamard_bits`` set, no calibrated ``h_amax``)
+    now runs sharded too, instead of falling back to one device: each
+    shard reduces its local ``|·|max`` over its (T_local, Cout_local)
+    Hadamard slab and ONE ``lax.pmax`` over both mesh axes merges them.
+    max-of-maxima IS the global abs-max — exactly, not approximately —
+    so the requant grid every shard then applies is identical to the
+    single-device derivation and the output is exactly equal to
+    single-device dynamic requant (the staged ``execute_int8`` path).
+    This costs a second (scalar-sized: (P, 1, 1)) collective per layer,
+    which is why calibrated layers remain the hot-path default.
+
+    ``T`` is zero-padded up to the data-axis extent (exact: zero int8
+    rows produce zero GEMM rows — and zero Hadamard products, which
+    never raise an abs-max — cropped before reassembly). ``Cout`` must
+    divide the model-axis extent: the weight shards are placed that way
+    (``conv.packing.place_packed_state``), and a ragged N split would
+    desynchronize the gather from the placement.
     """
-    from repro.distributed.sharding import data_axis_extent
-    if hadamard_bits is not None and h_amax is None:
-        raise ValueError(
-            "sharded serving requires calibrated Hadamard statistics "
-            "(h_amax) when the 8/9-bit requant stage is on — the dynamic "
-            "derivation reduces over the whole (T, Cout) plane, which "
-            "per-device tile slabs cannot see")
+    from repro.distributed.sharding import axis_extent
     blocks = validate_blocks(blocks)    # also normalizes lists → tuple
+    dm = axis_extent(mesh, model_axis)
+    cout = u_q.shape[-1]
+    if cout % dm != 0:
+        raise ValueError(
+            f"sharded serving: Cout={cout} is not divisible by the "
+            f"{model_axis!r} mesh axis extent {dm} — conv tensor "
+            "parallelism slices the per-position GEMM's N axis into "
+            "equal per-device slabs (see conv.packing)")
     deq = in_scales * w_scales
+    dynamic = hadamard_bits is not None and h_amax is None
     if hadamard_bits is None:
         rq = jnp.ones_like(deq)
-    else:
+    elif not dynamic:
         # Same scale formula as execute_int8 (shared helper) — sharded,
         # single-device fused and staged requantize onto one grid.
         rq = _hadamard_rq(h_amax, hadamard_bits)
@@ -417,52 +440,104 @@ def execute_int8_sharded(tiles: jnp.ndarray, u_q: jnp.ndarray,
     # then shard the int8 result across the mesh.
     Xq = quantize_input(tiles, in_scales, spec=spec, interpret=interpret)
 
-    ndev = data_axis_extent(mesh, data_axis)
+    ndev = axis_extent(mesh, data_axis)
     T = Xq.shape[1]
     pad = (-T) % ndev
     if pad:
         Xq = jnp.pad(Xq, ((0, 0), (0, pad), (0, 0)))
 
     da = tuple(data_axis) if isinstance(data_axis, list) else data_axis
-    fn = _sharded_executor(spec, mesh, hadamard_bits, interpret, blocks, da)
-    y = fn(Xq, u_q, deq, rq)
+    fn = _sharded_executor(spec, mesh, hadamard_bits, interpret, blocks,
+                           da, model_axis, dynamic)
+    y = fn(Xq, u_q, deq) if dynamic else fn(Xq, u_q, deq, rq)
     return _reassemble(y[:T], geom, spec.m)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_executor(spec: WinogradSpec, mesh: jax.sharding.Mesh,
                       hadamard_bits: Optional[int], interpret: bool,
-                      blocks: Optional[tuple], data_axis: str | tuple):
+                      blocks: Optional[tuple], data_axis: str | tuple,
+                      model_axis: Optional[str], dynamic: bool):
     """shard_map slab executor, cached per static configuration.
 
-    The heavy lowering is cached regardless — ``input_transform`` and
-    ``fused_gemm_output`` are module-level jits, so their compile caches
-    hit on every call; this cache additionally stops an eagerly-served
-    mesh engine from rebuilding the slab closure + shard_map wrapper per
-    call. Deliberately NOT wrapped in an outer ``jax.jit``: folding the
-    slab into one compile unit perturbs FMA contraction by a last bit
-    and would break the documented bitwise parity with the standalone
-    fused composition (docs/parity.md); production serving jits the
-    whole forward anyway. One entry per (spec, mesh, …) — a handful of
-    live meshes, so unbounded is fine.
+    The heavy lowering is cached regardless — ``input_transform``,
+    ``wino_gemm``, ``output_transform`` and ``fused_gemm_output`` are
+    module-level jits, so their compile caches hit on every call; this
+    cache additionally stops an eagerly-served mesh engine from
+    rebuilding the slab closure + shard_map wrapper per call.
+    Deliberately NOT wrapped in an outer ``jax.jit``: folding the slab
+    into one compile unit perturbs FMA contraction by a last bit and
+    would break the documented bitwise parity with the standalone fused
+    composition (docs/parity.md); production serving jits the whole
+    forward anyway. One entry per (spec, mesh, …) — a handful of live
+    meshes, so unbounded is fine.
+
+    The 2-D layout: ``Xq`` (P, T, Cin) shards T over ``data_axis``;
+    ``u_q`` (P, Cin, Cout) shards Cout over ``model_axis`` (matching
+    its ``place_packed_state`` placement, so the weights are already
+    local); the per-position scale vectors are replicated. Each slab
+    produces (T_local, Cout_local, m, m) and the one per-layer
+    model-axis ``all_gather`` (tiled, in mesh-index order — the same
+    order the weight shards were sliced in) reassembles the full Cout
+    before the data-axis outputs concatenate via ``out_specs``.
     """
     from repro.distributed.sharding import shard_map_compat
     from jax.sharding import PartitionSpec as P
     mats = make_matrices(spec)
+    qm = qmax(hadamard_bits) if hadamard_bits is not None else None
+    # The dynamic pmax spans the whole (T, Cout) plane — T is sharded
+    # over the data axis and Cout over the model axis, so the reduction
+    # names both (a single collective over the full mesh).
+    red_axes = data_axis if isinstance(data_axis, tuple) else (data_axis,)
+    if model_axis is not None:
+        red_axes = red_axes + (model_axis,)
 
-    def _slab(xq_l, u_q, deq, rq):
+    def _gather(y_l):
+        if model_axis is None:
+            return y_l
+        # THE one model-axis collective of the calibrated hot path:
+        # (T_local, Cout_local, m, m) → (T_local, Cout, m, m), tiled
+        # concat along the channel axis.
+        return jax.lax.all_gather(y_l, model_axis, axis=1, tiled=True)
+
+    def _slab(xq_l, uq_l, deq, rq):
         # Consumes a pre-quantized (P, T_local, Cin) int8 slab — the
         # input transform runs once on the full tensor (one Xq
-        # everywhere), NOT per slab.
-        return fused_gemm_output(xq_l, u_q, deq, rq, mats.CinvT, mats.APT,
-                                 m=spec.m, requant_bits=hadamard_bits,
-                                 changes_base=spec.changes_base,
-                                 blocks=blocks, interpret=interpret)
+        # everywhere), NOT per slab — and this device's
+        # (P, Cin, Cout_local) weight shard.
+        return _gather(fused_gemm_output(
+            xq_l, uq_l, deq, rq, mats.CinvT, mats.APT,
+            m=spec.m, requant_bits=hadamard_bits,
+            changes_base=spec.changes_base,
+            blocks=blocks, interpret=interpret))
 
-    shard = P(None, data_axis)          # Xq is (P, T, Cin): shard T
+    def _slab_dynamic(xq_l, uq_l, deq):
+        # Sharded dynamic requant: the staged pipeline per slab, with
+        # the plane-wide abs-max assembled from shard-local maxima by
+        # one pmax. Same formulas, same operand order as the staged
+        # ``execute_int8`` dynamic branch — max-of-maxima is exact, so
+        # every downstream elementwise value matches the single-device
+        # derivation bit for bit.
+        H = wino_gemm(xq_l, uq_l, blocks=blocks, interpret=interpret)
+        hf = H.astype(jnp.float32) * deq[:, :, None]
+        amax = jnp.max(jnp.abs(hf), axis=(1, 2), keepdims=True)
+        amax = jax.lax.pmax(amax, red_axes)
+        s_h = jnp.maximum(amax, 1e-12) / qm
+        Hq = jnp.clip(jnp.round(hf / s_h), -qm, qm).astype(jnp.int32)
+        return _gather(output_transform(
+            Hq, s_h[:, :, 0], mats.CinvT, mats.APT, m=spec.m,
+            changes_base=spec.changes_base, interpret=interpret))
+
+    xq_spec = P(None, data_axis)        # Xq is (P, T, Cin): shard T
+    wq_spec = P(None, None, model_axis)  # u_q (P, Cin, Cout): shard Cout
+    out = P(data_axis)
+    if dynamic:
+        return shard_map_compat(_slab_dynamic, mesh,
+                                in_specs=(xq_spec, wq_spec, P()),
+                                out_specs=out)
     return shard_map_compat(_slab, mesh,
-                            in_specs=(shard, P(), P(), P()),
-                            out_specs=P(data_axis))
+                            in_specs=(xq_spec, wq_spec, P(), P()),
+                            out_specs=out)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))

@@ -171,8 +171,31 @@ def output_transform(h: jnp.ndarray, pos_scale: jnp.ndarray,
     P, T, C = h.shape
     n = int(round(P ** 0.5))
     assert n * n == P
-    bt, bc = min(block[0], T), min(block[1], C)
+    # Shape-stability contract: the 2-D sharded dynamic-requant path runs
+    # this transform per device on a (T/D_data, C/D_model) slab and
+    # asserts bitwise equality with the full-tensor call, so the compiled
+    # arithmetic must not depend on how many tiles a call sees. Two rules
+    # achieve that: (a) bt is NOT clamped to T — the tile-block shape is
+    # the same for a 5-row slab and the full tensor (zero padding covers
+    # T < bt; zero rows transform to zero rows and are cropped below);
+    # (b) the grid always has ≥ 2 steps — a single-step pallas_call gets
+    # inlined into the surrounding jit and XLA re-fuses/contracts its
+    # multiply-adds, while the multi-step grid loop is a fusion barrier
+    # whose per-block program is identical at every grid size AND block
+    # shape (verified: grid 2 and grid 3 agree bitwise across differing
+    # block shapes, either disagrees with grid 1 in the last fp32 bit).
+    # When a call would compile to one step, split the channel block in
+    # half (same total work, one extra step) rather than padding a whole
+    # all-zero tile block; padding is the fallback for odd/1-channel.
+    bt, bc = block[0], min(block[1], C)
+    if -(-T // bt) == 1 and -(-C // bc) == 1:
+        if bc % 2 == 0:
+            bc //= 2
+        else:
+            bt = max(1, (T + 1) // 2)
     hp = _pad_axis(_pad_axis(h, 1, bt), 2, bc)
+    if hp.shape[1] // bt == 1 and hp.shape[2] // bc == 1:
+        hp = _pad_axis(hp, 1, 2 * bt)    # T == C == 1: nothing to split
     Tp, Cp = hp.shape[1], hp.shape[2]
     grid = (Tp // bt, Cp // bc)
     out = pl.pallas_call(

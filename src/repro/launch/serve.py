@@ -14,8 +14,10 @@ offline batches):
    PRs 1–5: transform weights once, calibrate per-position scales (and
    optionally autotune the Pallas block splits), serialize the packed
    state through ``repro.checkpoint``.
-2. **restore + warmup** — a fresh engine (optionally mesh-sharded via
-   ``--mesh-devices``) imports the checkpoint, then pre-compiles every
+2. **restore + warmup** — a fresh engine (optionally sharded over a
+   ``--mesh-devices`` data axis × ``--model-devices`` model axis, with
+   packed weights cout-sharded on restore) imports the checkpoint, then
+   pre-compiles every
    registered serving geometry (``ConvEngine.warmup`` over the bucket
    set) so no request ever waits on XLA.
 3. **serve** — ``repro.serving.ServingLoop`` coalesces Poisson arrivals
@@ -109,18 +111,39 @@ def build_serving_state(args, cfg):
 def make_served_engine(args, cfg, template):
     """Online stage 2: restore the checkpoint into a fresh (optionally
     mesh-backed) engine — packed weights, calibrated scales and tuned
-    blocks all come from the checkpoint, unchanged."""
-    mesh = None
-    if args.mesh_devices > 0:
+    blocks all come from the checkpoint, unchanged.
+
+    ``--mesh-devices D --model-devices M`` serves over a 2-D
+    (data × model) mesh of D×M devices: request tiles shard over the
+    data axis, every layer's Cout (and its 1/M of the packed weight
+    bytes) over the model axis. The checkpoint itself is
+    topology-free — ``restore(shardings=...)`` reshards the full saved
+    arrays onto whatever mesh this process serves with."""
+    mesh, model_axis, shardings = None, None, None
+    if args.mesh_devices > 0 or args.model_devices > 1:
         from jax.sharding import Mesh
+        dd = max(args.mesh_devices, 1)
+        dm = max(args.model_devices, 1)
         ndev = len(jax.devices())
-        if args.mesh_devices > ndev:
-            print(f"[warn] --mesh-devices {args.mesh_devices} > visible "
-                  f"devices {ndev}; using {ndev} (pass --host-devices to "
-                  "split the host CPU)")
-        d = min(args.mesh_devices, ndev)
-        mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
-        print(f"[mesh] serving across {d} device(s), tile-axis shard_map")
+        if dd * dm > ndev:
+            print(f"[warn] --mesh-devices {dd} × --model-devices {dm} > "
+                  f"visible devices {ndev}; shrinking the data axis "
+                  "(pass --host-devices to split the host CPU)")
+            dd = max(ndev // dm, 1)
+        if dm > 1:
+            devs = np.array(jax.devices()[:dd * dm]).reshape(dd, dm)
+            mesh = Mesh(devs, ("data", "model"))
+            model_axis = "model"
+            print(f"[mesh] serving across {dd}×{dm} (data × model) "
+                  "devices: tiles × Cout shard_map, weights "
+                  f"cout-sharded 1/{dm} per device")
+        else:
+            mesh = Mesh(np.array(jax.devices()[:dd]), ("data",))
+            print(f"[mesh] serving across {dd} device(s), tile-axis "
+                  "shard_map")
+        from repro.conv.packing import packed_tree_shardings
+        shardings = packed_tree_shardings(mesh, template,
+                                          model_axis=model_axis)
     # The plan (if the checkpoint carries one) is recovered template-
     # free first: it defines which layers the restore template expects
     # packed, so the engine must know it before import (None for a
@@ -129,8 +152,8 @@ def make_served_engine(args, cfg, template):
     if plan is not None:
         print(f"[plan] serving the checkpoint's plan: {plan.describe()}")
     engine = RN.make_engine(cfg, backend="winograd_int8", mesh=mesh,
-                            plan=plan)
-    tree, _ = restore(args.ckpt_dir, template)
+                            model_axis=model_axis, plan=plan)
+    tree, _ = restore(args.ckpt_dir, template, shardings=shardings)
     engine.import_state(tree)
     return engine
 
@@ -176,6 +199,11 @@ def main(argv=None):
     ap.add_argument("--mesh-devices", type=int, default=0,
                     help="serve through a data-axis mesh of N devices "
                          "(0 = single device)")
+    ap.add_argument("--model-devices", type=int, default=0,
+                    help="add a model axis of M devices: a 2-D "
+                         "(data × model) mesh of N×M devices shards "
+                         "each layer's Cout (and 1/M of the packed "
+                         "weight bytes) per device")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="split the host CPU into N XLA devices "
                          "(re-execs with XLA_FLAGS; for --mesh-devices)")

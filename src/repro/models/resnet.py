@@ -151,7 +151,8 @@ def _bn(x, p, st, training: bool, momentum: float):
 
 def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
                 fused: bool = True, interpret: bool = True,
-                mesh=None, blocks: Optional[tuple] = None,
+                mesh=None, data_axis="data", model_axis=None,
+                blocks: Optional[tuple] = None,
                 autotune: bool = False,
                 autotune_opts: Optional[dict] = None,
                 warmup: Optional[tuple] = None,
@@ -163,11 +164,13 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
     kernels without touching model code). ``fused=False`` forces the
     staged int8 pipeline (bit-identical; for benchmarking the fusion
     win). ``mesh`` serves prepared+calibrated int8 layers sharded across
-    the mesh's "data" axis (tile-slab parallelism — see
-    ``ConvEngine``); ``blocks`` manually overrides the Pallas GEMM tile
-    blocks; ``autotune=True`` instead searches the block split per
-    layer shape at calibration time and caches the winners in the
-    packed state (``repro.conv.autotune``).
+    the mesh: tiles over ``data_axis`` (tile-slab parallelism) and —
+    with ``model_axis`` set — each conv's Cout over that axis too (conv
+    tensor parallelism: weight shards per device, one all_gather per
+    layer — see ``ConvEngine``); ``blocks`` manually overrides the
+    Pallas GEMM tile blocks; ``autotune=True`` instead searches the
+    block split per layer shape at calibration time and caches the
+    winners in the packed state (``repro.conv.autotune``).
 
     ``warmup=(params, state, geometries)`` additionally builds the
     jitted serving forward (``serving_forward``), stores it on the
@@ -192,6 +195,7 @@ def make_engine(cfg: ResNetConfig, backend: Optional[str] = None,
         backend = backend or cfg.conv_backend or "winograd_fakequant"
         eng = ConvEngine(cfg.wino, ConvPolicy(backend=backend),
                          fused=fused, interpret=interpret, mesh=mesh,
+                         data_axis=data_axis, model_axis=model_axis,
                          blocks=blocks, autotune=autotune,
                          autotune_opts=autotune_opts, plan=plan)
     if warmup is not None:

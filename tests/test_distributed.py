@@ -458,3 +458,241 @@ def test_planned_checkpoint_restores_into_mesh_engine():
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_tp_axis_extent_and_cout_divisibility():
+    """Satellite contracts of conv tensor parallelism: ``axis_extent``
+    reads any 1×1/2×1/1×2/2×2 mesh (absent axes and None count as
+    extent 1, tuples multiply), and a Cout the model axis does not
+    divide is a loud error naming the offending packed leaf — never a
+    silent replication that would desynchronize placement from the
+    executor's per-device slab slicing."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.conv.packing import packed_tree_shardings
+        from repro.distributed.sharding import axis_extent
+
+        for dd, dm in ((1, 1), (2, 1), (1, 2), (2, 2)):
+            mesh = Mesh(np.array(jax.devices()[:dd * dm]).reshape(dd, dm),
+                        ("data", "model"))
+            assert axis_extent(mesh, "data") == dd, (dd, dm)
+            assert axis_extent(mesh, "model") == dm, (dd, dm)
+            assert axis_extent(mesh, None) == 1
+            assert axis_extent(mesh, "absent") == 1
+            assert axis_extent(mesh, ("data", "model")) == dd * dm
+        # 1-D legacy mesh: the model axis simply does not exist
+        mesh1 = Mesh(np.array(jax.devices()[:2]), ("data",))
+        assert axis_extent(mesh1, "model") == 1
+
+        # Cout=6 is not divisible by a model axis of extent 4
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(1, 4),
+                    ("data", "model"))
+        tree = {"packed": {"c": {
+            "u_q": jnp.zeros((16, 4, 6), jnp.int8),
+            "w_scales": jnp.ones((16, 1)),
+            "in_scales": jnp.ones((16, 1)),
+        }}}
+        try:
+            packed_tree_shardings(mesh, tree, model_axis="model")
+        except ValueError as e:
+            assert "packed/c/u_q" in str(e), e
+            assert "Cout=6" in str(e), e
+        else:
+            raise AssertionError("non-divisible Cout must raise")
+        # the same tree is fine on a model axis that divides 6
+        mesh = Mesh(np.array(jax.devices()[:2]).reshape(1, 2),
+                    ("data", "model"))
+        shd = packed_tree_shardings(mesh, tree, model_axis="model")
+        assert shd["packed"]["c"]["u_q"] is not None
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_tp_reshard_on_restore():
+    """A checkpoint written on ONE device restores onto a 2×2
+    (data × model) mesh with every ``u_q`` cout-sharded (half the
+    packed bytes per device), the per-position statistics replicated —
+    and the TP engine's serving output bitwise identical to the
+    single-device fused engine that wrote the checkpoint."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.checkpoint.checkpoint import restore, save
+        from repro.conv import ConvEngine, ConvPolicy
+        from repro.conv.packing import packed_tree_shardings
+        from repro.core.quantization import QuantConfig
+        from repro.core.winograd import WinogradSpec
+        import tempfile
+
+        spec = WinogradSpec(m=4, r=3, base="legendre",
+                            quant=QuantConfig(hadamard_bits=9))
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 12)) * 0.2
+
+        src = ConvEngine(spec, ConvPolicy(backend="winograd_int8"))
+        src.prepare([("c", w)])
+        with src.calibration():
+            src.conv2d(x, w, layer="c")
+        ckpt = tempfile.mkdtemp()
+        save(ckpt, 0, src.export_state())
+        y_ref = np.asarray(src.conv2d(x, None, layer="c"))
+
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                    ("data", "model"))
+        eng = ConvEngine(spec, ConvPolicy(backend="winograd_int8"),
+                         mesh=mesh, model_axis="model")
+        eng.prepare([("c", w)])
+        shd = packed_tree_shardings(mesh, eng.state_template(),
+                                    model_axis="model")
+        tree, _ = restore(ckpt, eng.state_template(), shardings=shd)
+        eng.import_state(tree)
+
+        pk = eng.packed["c"]
+        # u_q: (P, Cin, Cout=12) sharded to (P, Cin, 6) per device
+        shards = pk.u_q.addressable_shards
+        assert {s.data.shape[-1] for s in shards} == {6}, \\
+            [s.data.shape for s in shards]
+        # per-position stats: replicated (full shape on every device)
+        assert all(s.data.shape == pk.in_scales.shape
+                   for s in pk.in_scales.addressable_shards)
+        y_tp = np.asarray(eng.conv2d(x, None, layer="c"))
+        assert np.array_equal(y_tp, y_ref)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_tp_2d_sharded_parity_sweep():
+    """The tentpole acceptance sweep: 2-D (data × model) sharded serving
+    is BITWISE equal to the single-device fused composition for
+    calibrated layers across F(2,3)/F(4,3) × canonical/legendre ×
+    hadamard_bits {None, 8, 9} on 1-, 2- and 4-device meshes — and the
+    sharded DYNAMIC requant (per-shard |·|max + one ``lax.pmax``) is
+    exactly equal to the single-device dynamic staged path. The
+    max-of-maxima is the true global max, so dynamic TP serving is not
+    an approximation."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core.quantization import QuantConfig
+        from repro.core.winograd import WinogradSpec
+        from repro.kernels.ops import (_extract, _geometry,
+                                       _tiles_abs_max, execute_int8,
+                                       execute_int8_sharded,
+                                       prepare_weights_int8,
+                                       scales_from_abs_max)
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 4))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 8)) * 0.2
+        meshes = ((1, 1), (2, 1), (1, 2), (2, 2))
+        for m in (2, 4):
+            for base in ("canonical", "legendre"):
+                spec0 = WinogradSpec(m=m, r=3, base=base)
+                u_q, w_s = prepare_weights_int8(w, spec0)
+                tiles = _extract(x, m, 3, spec0.n, "same")
+                geom = _geometry(x.shape, m, 3, "same")
+                in_s = scales_from_abs_max(_tiles_abs_max(tiles, spec0))
+                for bits in (None, 8, 9):
+                    spec = WinogradSpec(m=m, r=3, base=base,
+                                        quant=QuantConfig(
+                                            hadamard_bits=bits))
+                    h_amax = None
+                    if bits is not None:
+                        _, amax = execute_int8(
+                            tiles, u_q, w_s, in_s, spec=spec, geom=geom,
+                            hadamard_bits=bits, interpret=True,
+                            with_stats=True)
+                        h_amax = amax.reshape(-1, 1)
+                    ref = np.asarray(execute_int8(
+                        tiles, u_q, w_s, in_s, h_amax, spec=spec,
+                        geom=geom, hadamard_bits=bits, fused=True,
+                        interpret=True))
+                    ref_dyn = None
+                    if bits is not None:
+                        ref_dyn = np.asarray(execute_int8(
+                            tiles, u_q, w_s, in_s, None, spec=spec,
+                            geom=geom, hadamard_bits=bits,
+                            interpret=True))
+                    for dd, dm in meshes:
+                        mesh = Mesh(np.array(
+                            jax.devices()[:dd * dm]).reshape(dd, dm),
+                            ("data", "model"))
+                        y = np.asarray(execute_int8_sharded(
+                            tiles, u_q, w_s, in_s, h_amax, spec=spec,
+                            geom=geom, mesh=mesh, hadamard_bits=bits,
+                            interpret=True, model_axis="model"))
+                        assert np.array_equal(y, ref), \\
+                            ("calibrated", m, base, bits, dd, dm,
+                             np.abs(y - ref).max())
+                        if bits is not None:
+                            yd = np.asarray(execute_int8_sharded(
+                                tiles, u_q, w_s, in_s, None, spec=spec,
+                                geom=geom, mesh=mesh, hadamard_bits=bits,
+                                interpret=True, model_axis="model"))
+                            assert np.array_equal(yd, ref_dyn), \\
+                                ("dynamic", m, base, bits, dd, dm,
+                                 np.abs(yd - ref_dyn).max())
+        print("OK")
+    """, timeout=560)
+    assert "OK" in out
+
+
+def test_tp_f63_and_small_slab_regression():
+    """F(6,3) through the 2-D TP executor (both bases, 9-bit requant,
+    2×2 mesh) — plus the small-slab regression: a (4, 2) mesh leaves
+    each device a 5-row tile slab, which once compiled the output
+    transform at a different pallas grid shape than the full-tensor
+    reference and broke dynamic exactness in the last fp32 bit
+    (fixed by the transform's shape-stability contract; see
+    ``wino_transform.output_transform``)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core.quantization import QuantConfig
+        from repro.core.winograd import WinogradSpec
+        from repro.kernels.ops import (_extract, _geometry,
+                                       _tiles_abs_max, execute_int8,
+                                       execute_int8_sharded,
+                                       prepare_weights_int8,
+                                       scales_from_abs_max)
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 4))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 8)) * 0.2
+
+        cases = ([(6, base, 9, (2, 2)) for base in
+                  ("canonical", "legendre")]
+                 + [(4, "legendre", 8, (4, 2))])
+        for m, base, bits, (dd, dm) in cases:
+            spec = WinogradSpec(m=m, r=3, base=base,
+                                quant=QuantConfig(hadamard_bits=bits))
+            u_q, w_s = prepare_weights_int8(w, spec)
+            tiles = _extract(x, m, 3, spec.n, "same")
+            geom = _geometry(x.shape, m, 3, "same")
+            in_s = scales_from_abs_max(_tiles_abs_max(tiles, spec))
+            _, amax = execute_int8(tiles, u_q, w_s, in_s, spec=spec,
+                                   geom=geom, hadamard_bits=bits,
+                                   interpret=True, with_stats=True)
+            h_amax = amax.reshape(-1, 1)
+            ref = np.asarray(execute_int8(
+                tiles, u_q, w_s, in_s, h_amax, spec=spec, geom=geom,
+                hadamard_bits=bits, fused=True, interpret=True))
+            ref_dyn = np.asarray(execute_int8(
+                tiles, u_q, w_s, in_s, None, spec=spec, geom=geom,
+                hadamard_bits=bits, interpret=True))
+            mesh = Mesh(np.array(jax.devices()[:dd * dm]).reshape(dd, dm),
+                        ("data", "model"))
+            y = np.asarray(execute_int8_sharded(
+                tiles, u_q, w_s, in_s, h_amax, spec=spec, geom=geom,
+                mesh=mesh, hadamard_bits=bits, interpret=True,
+                model_axis="model"))
+            assert np.array_equal(y, ref), (m, base, bits, dd, dm)
+            yd = np.asarray(execute_int8_sharded(
+                tiles, u_q, w_s, in_s, None, spec=spec, geom=geom,
+                mesh=mesh, hadamard_bits=bits, interpret=True,
+                model_axis="model"))
+            assert np.array_equal(yd, ref_dyn), (m, base, bits, dd, dm)
+        print("OK")
+    """, timeout=560)
+    assert "OK" in out

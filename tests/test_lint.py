@@ -21,6 +21,7 @@ def _rules(findings, waived=False):
 
 @pytest.mark.parametrize("fixture,rule", [
     ("bad_jit_flavor.py", "jit-arg-flavor"),
+    ("bad_shard_map_flavor.py", "jit-arg-flavor"),
     ("bad_cached_arrays.py", "cached-array-args"),
     ("bad_unsynced_timing.py", "unsynced-timing"),
 ])
@@ -69,6 +70,33 @@ def test_jit_assignment_form_is_tracked():
         g(jax.device_put(np.ones(3)))
     """)
     assert _rules(lint_source(src)) == ["jit-arg-flavor"]
+
+
+def test_shard_map_wrapped_callable_is_tracked():
+    # The sharded serving executor idiom: a shard_map(_compat)-wrapped
+    # body dispatches like a jitted callable, so cross-call-site flavor
+    # mixing is the same hazard.
+    src = textwrap.dedent("""
+        import jax, numpy as np
+        from jax.sharding import PartitionSpec as P
+        def f(a):
+            return a
+        g = jax.shard_map(f, mesh=None, in_specs=P(), out_specs=P())
+        g(np.ones(3))
+        g(jax.device_put(np.ones(3)))
+    """)
+    assert _rules(lint_source(src)) == ["jit-arg-flavor"]
+    # single-flavor call sites stay clean
+    src_ok = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.distributed.sharding import shard_map_compat
+        def f(a):
+            return a
+        g = shard_map_compat(f, None, in_specs=(), out_specs=())
+        g(jax.device_put(np.ones(3)))
+        g(jax.device_put(np.zeros(3)))
+    """)
+    assert not _rules(lint_source(src_ok))
 
 
 def test_cached_function_with_hashable_annotations_passes():

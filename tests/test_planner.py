@@ -194,6 +194,33 @@ def test_plan_cost_us_requires_table_entry():
         plan_cost_us(Plan({"l": _wentry()}), costs)
 
 
+def test_plan_cost_us_mesh_aware():
+    # One Winograd layer (100us) and one direct layer (40us). On a
+    # (data=2, model=2) mesh the Winograd GEMM splits over all 4
+    # devices plus one flat model-axis collective; the direct fallback
+    # only data-parallelizes. model_axis=None must reproduce the
+    # 1-D data-sharded cost exactly (no collective term).
+    from repro.conv.planner import TP_COLLECTIVE_US
+    costs = {"w": (_cost(_wentry(), 100.0, 0.01),),
+             "d": (_cost(PlanEntry(), 40.0, 0.0),)}
+    plan = Plan({"w": _wentry(), "d": PlanEntry()})
+    assert plan_cost_us(plan, costs) == 140.0
+
+    # plan_cost_us only reads mesh.shape (via axis_extent), so a stub
+    # stands in for a real 4-device mesh — tier-1 runs on one device.
+    import types
+    mesh22 = types.SimpleNamespace(shape={"data": 2, "model": 2})
+    got = plan_cost_us(plan, costs, mesh=mesh22, model_axis="model")
+    assert got == pytest.approx(100.0 / 4 + TP_COLLECTIVE_US + 40.0 / 2)
+    # data-only view of the same mesh: no Cout split, no collective
+    got_1d = plan_cost_us(plan, costs, mesh=mesh22)
+    assert got_1d == pytest.approx(100.0 / 2 + 40.0 / 2)
+    # collective cost is tunable per interconnect
+    got_c0 = plan_cost_us(plan, costs, mesh=mesh22, model_axis="model",
+                          collective_us=0.0)
+    assert got_c0 == pytest.approx(100.0 / 4 + 40.0 / 2)
+
+
 # ---------------------------------------------------------------------------
 # golden plan snapshot (frozen synthetic accelerator cost surface)
 # ---------------------------------------------------------------------------
